@@ -1,0 +1,115 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  fig4   end-to-end verification time per model/strategy   (paper Fig. 4)
+  fig5   scaling vs parallelism degree                     (paper Fig. 5)
+  fig6   lemma-library effort: count + complexity          (paper Fig. 6)
+  fig7   lemma application counts per case                 (paper Fig. 7)
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = e-graph nodes or
+counts, per section).
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def _cases():
+    from repro.launch.verify import run_case
+    return run_case
+
+
+def fig4_verification_time(rows):
+    """Per-case end-to-end verification time (paper Fig. 4 analogue).
+    The paper's models map onto these strategy cases: GPT/Megatron -> TP+SP,
+    Qwen2/vLLM -> TP, Llama-3/Neuron -> TP, HF regression -> grad-accum."""
+    run_case = _cases()
+    for case in ["tp_layer", "sp_pad", "ep_moe", "sp_moe", "ln_grad"]:
+        t0 = time.perf_counter()
+        cert = run_case(case, quiet=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig4/{case}", dt, cert.stats["egraph_nodes"]))
+
+
+def fig5_scaling(rows):
+    """Verification time vs parallelism degree (2, 4, 8)."""
+    run_case = _cases()
+    for deg in (2, 4, 8):
+        t0 = time.perf_counter()
+        cert = run_case("sp_moe", degree=deg, quiet=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig5/sp_moe_deg{deg}", dt, cert.stats["egraph_nodes"]))
+    for deg in (2, 4):
+        t0 = time.perf_counter()
+        try:
+            cert = run_case("tp_layer", degree=deg, quiet=True)
+            nodes = cert.stats["egraph_nodes"]
+        except Exception:   # completeness gap at this degree — record it
+            nodes = -1
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig5/tp_layer_deg{deg}", dt, nodes))
+
+
+def fig6_lemma_effort(rows):
+    """Lemma library size + complexity (paper Fig. 6: effort to add)."""
+    from repro.core.lemmas import all_lemmas
+    lemmas = all_lemmas()
+    import inspect
+    total_loc = 0
+    for lem in lemmas:
+        loc = len(inspect.getsource(lem.fn).splitlines())
+        total_loc += loc
+        rows.append((f"fig6/loc/{lem.name}", 0.0, loc))
+    rows.append(("fig6/n_lemmas", 0.0, len(lemmas)))
+    rows.append(("fig6/avg_loc", 0.0, total_loc // max(len(lemmas), 1)))
+    by_src = {}
+    for lem in lemmas:
+        by_src[lem.source] = by_src.get(lem.source, 0) + 1
+    for src, n in sorted(by_src.items()):
+        rows.append((f"fig6/source/{src}", 0.0, n))
+
+
+def fig7_lemma_heatmap(rows):
+    """Lemma fire counts per verification case (paper Fig. 7 heatmap)."""
+    run_case = _cases()
+    for case in ["tp_layer", "ep_moe", "sp_moe", "ln_grad"]:
+        cert = run_case(case, quiet=True)
+        for lemma, n in sorted(cert.stats["lemma_fires"].items()):
+            rows.append((f"fig7/{case}/{lemma}", 0.0, n))
+
+
+def kernels_bench(rows):
+    """Pallas kernel wall time (interpret mode on CPU — correctness path)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.rmsnorm import rmsnorm
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    t0 = time.perf_counter()
+    rmsnorm(x, s, interpret=True).block_until_ready()
+    rows.append(("kernels/rmsnorm_interp", (time.perf_counter() - t0) * 1e6,
+                 x.size))
+    t0 = time.perf_counter()
+    ref.rmsnorm_ref(x, s).block_until_ready()
+    rows.append(("kernels/rmsnorm_ref", (time.perf_counter() - t0) * 1e6,
+                 x.size))
+
+
+def main() -> None:
+    rows = []
+    for section in (fig4_verification_time, fig5_scaling, fig6_lemma_effort,
+                    fig7_lemma_heatmap, kernels_bench):
+        try:
+            section(rows)
+        except Exception as e:  # noqa: BLE001 — report per-section
+            rows.append((f"{section.__name__}/ERROR({type(e).__name__})",
+                         0.0, 0))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

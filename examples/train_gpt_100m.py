@@ -1,0 +1,58 @@
+"""End-to-end driver: train the paper's GPT (~100M params) for a few hundred
+steps on the synthetic pipeline; checkpoints + loss curve.
+
+    PYTHONPATH=src python examples/train_gpt_100m.py [--steps 300]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.checkpoint import save_checkpoint
+from repro.data.pipeline import SyntheticTextDataset
+from repro.models import registry
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_gpt_ckpt")
+    args = ap.parse_args()
+
+    cfg = registry.load_config("gpt")
+    # ~100M-scale: keep the paper's GPT dims, shorter context for CPU demo
+    print(f"model: {cfg.name}  params={registry.n_params(cfg)/1e6:.1f}M")
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=20),
+                       microbatches=2)   # grad accumulation (verified path)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    ds = SyntheticTextDataset(vocab=cfg.vocab, seq_len=args.seq,
+                              batch=args.batch, seed=0)
+    t0 = time.time()
+    first = last = None
+    for step in range(args.steps):
+        batch = ds.batch_at(step)
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step == 0:
+            first = float(metrics["loss"])
+        if step % 50 == 0 or step == args.steps - 1:
+            last = float(metrics["loss"])
+            print(f"step {step:4d} loss {last:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time()-t0:.0f}s)")
+    save_checkpoint(args.ckpt, args.steps, {"params": params})
+    print(f"loss {first:.3f} -> {last:.3f}; checkpoint at {args.ckpt}")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

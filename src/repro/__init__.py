@@ -1,0 +1,3 @@
+"""GraphGuard-JAX: verified distributed model refinement + the multi-pod
+JAX training/serving framework it checks. See README.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,74 @@
+"""Msgpack tensor checkpointing (sharded-tree aware, atomic writes)."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import msgpack
+import numpy as np
+
+import jax
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _pack_array(a):
+    a = np.asarray(a)
+    return {b"dtype": a.dtype.str, b"shape": list(a.shape),
+            b"data": a.tobytes()}
+
+
+def _unpack_array(d):
+    return np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"])) \
+        .reshape(d[b"shape"])
+
+
+def save_checkpoint(path: str, step: int, tree) -> str:
+    os.makedirs(path, exist_ok=True)
+    flat = {k: _pack_array(jax.device_get(v))
+            for k, v in _flatten(tree).items()}
+    payload = msgpack.packb({"step": step, "tensors": flat})
+    fname = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    fd, tmp = tempfile.mkstemp(dir=path)
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, fname)
+    return fname
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".msgpack")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, step: int, like_tree):
+    fname = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    with open(fname, "rb") as f:
+        payload = msgpack.unpackb(f.read(), strict_map_key=False)
+    tensors = {k: _unpack_array(v) for k, v in payload["tensors"].items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k], f"{prefix}{k}/") for k in tree}
+        if isinstance(tree, (tuple, list)):
+            vals = [rebuild(v, f"{prefix}#{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        key = prefix[:-1]
+        arr = tensors[key]
+        return arr.astype(tree.dtype) if hasattr(tree, "dtype") else arr
+
+    return payload["step"], rebuild(like_tree)

@@ -1,0 +1,2 @@
+"""Assigned architecture configs (+ the paper's GPT). One module per arch;
+``repro.models.registry.load_config`` resolves ids to CONFIG objects."""

@@ -1,0 +1,23 @@
+"""GraphGuard core: static verification of distributed model refinement.
+
+Public API:
+    capture, capture_spmd, expand_spmd   — graph capture (jaxpr -> Graph)
+    check_refinement, GraphGuard         — iterative relation inference
+    Certificate, RefinementError         — results
+    register_lemma                       — user lemma extension point
+"""
+from .capture import (Graph, CaptureError, capture, capture_spmd,
+                      expand_spmd, derive_input_relation)
+from .egraph import EGraph, Lemma, EGraphLimit, EGraphShapeError
+from .infer import Certificate, GraphGuard, RefinementError, check_refinement
+from .lemmas import all_lemmas, register_lemma
+from .symbolic import AffExpr, ScalarSolver, NonAffine
+from . import terms
+
+__all__ = [
+    "Graph", "CaptureError", "capture", "capture_spmd", "expand_spmd",
+    "derive_input_relation", "EGraph", "Lemma", "EGraphLimit",
+    "EGraphShapeError", "Certificate", "GraphGuard", "RefinementError",
+    "check_refinement", "all_lemmas", "register_lemma", "AffExpr",
+    "ScalarSolver", "NonAffine", "terms",
+]

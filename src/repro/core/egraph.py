@@ -1,0 +1,385 @@
+"""EGraph: equality saturation engine for GraphGuard relation inference.
+
+A pure-Python reimplementation of the egg-style e-graph the paper builds on
+(Willsey et al., POPL'21): hash-consed e-nodes, union-find over e-classes,
+congruence closure via worklist repair, and a saturation driver that applies
+procedural *lemmas* (see ``repro.core.lemmas``).
+
+Differences from egg, driven by GraphGuard's use (paper §4.2.2, §4.3.2):
+  * Lemmas are procedural Python matchers rather than declarative patterns —
+    lemma conditions need shape arithmetic and (occasionally) the affine
+    scalar solver, which is natural in Python.
+  * Each e-class carries a shape/dtype analysis; merging classes with
+    disagreeing shapes is an internal soundness error (fail loudly).
+  * Clean-expression extraction (paper's step 4) is built in: for a class, we
+    search for the minimum-cost expression whose interior ops are CLEAN_OPS
+    and whose leaves lie in a caller-supplied set of tensors.
+  * "Pruning self-provable expressions" (§4.3.2) falls out of extraction: we
+    always keep the *simplest* representative; the e-graph stores the rest
+    compactly by sharing.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Iterable, Optional
+
+from .terms import Term, CLEAN_OPS, tensor as mk_tensor
+
+
+class ENode:
+    __slots__ = ("op", "attrs", "children", "_hash")
+
+    def __init__(self, op: str, attrs: tuple, children: tuple):
+        self.op = op
+        self.attrs = attrs
+        self.children = children
+        self._hash = hash((op, attrs, children))
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        return (self.op == other.op and self.attrs == other.attrs
+                and self.children == other.children)
+
+    def canonical(self, find) -> "ENode":
+        ch = tuple(find(c) for c in self.children)
+        if ch == self.children:
+            return self
+        return ENode(self.op, self.attrs, ch)
+
+    def __repr__(self):
+        return f"ENode({self.op}, {self.attrs}, {self.children})"
+
+
+class EClassInfo:
+    __slots__ = ("nodes", "parents", "shape", "dtype", "tensors", "related")
+
+    def __init__(self, shape, dtype):
+        self.nodes: set[ENode] = set()
+        self.parents: list[tuple[ENode, int]] = []
+        self.shape = shape
+        self.dtype = dtype
+        # tensor names (leaves) known to live in this class
+        self.tensors: set[str] = set()
+        # GraphGuard T_rel marker (frontier optimization, Listing 3)
+        self.related: bool = False
+
+
+class EGraph:
+    def __init__(self, max_nodes: int = 200_000):
+        self.uf: list[int] = []
+        self.classes: dict[int, EClassInfo] = {}
+        self.hashcons: dict[ENode, int] = {}
+        self.worklist: list[int] = []
+        self.pending: list[tuple[ENode, int]] = []  # (node, class) for lemma queue
+        self.max_nodes = max_nodes
+        self.n_nodes = 0
+        self.version = 0  # bumped on every union; cheap fixpoint detection
+
+    # -- union-find ---------------------------------------------------------
+    def find(self, a: int) -> int:
+        while self.uf[a] != a:
+            self.uf[a] = self.uf[self.uf[a]]
+            a = self.uf[a]
+        return a
+
+    def _new_class(self, shape, dtype) -> int:
+        cid = len(self.uf)
+        self.uf.append(cid)
+        self.classes[cid] = EClassInfo(shape, dtype)
+        return cid
+
+    # -- adding terms / nodes ------------------------------------------------
+    def add_term(self, t: Term) -> int:
+        """Intern a Term, returning its e-class id. ``cls`` leaves are
+        references to existing e-classes (used by procedural lemmas to build
+        rewritten terms over classes rather than concrete terms)."""
+        if t.op == "cls":
+            return self.find(t.attr("id"))
+        if t.op == "tensor":
+            node = ENode("tensor", t.attrs, ())
+        elif t.op == "lit":
+            node = ENode("lit", t.attrs, ())
+        else:
+            ch = tuple(self.add_term(a) for a in t.args)
+            node = ENode(t.op, t.attrs, ch)
+        return self.add_enode(node, t.shape, t.dtype)
+
+    def add_enode(self, node: ENode, shape, dtype) -> int:
+        node = node.canonical(self.find)
+        hit = self.hashcons.get(node)
+        if hit is not None:
+            return self.find(hit)
+        if self.n_nodes >= self.max_nodes:
+            raise EGraphLimit(f"egraph node limit {self.max_nodes} exceeded")
+        cid = self._new_class(shape, dtype)
+        info = self.classes[cid]
+        info.nodes.add(node)
+        if node.op == "tensor":
+            info.tensors.add(dict(node.attrs)["name"])
+        self.hashcons[node] = cid
+        for c in node.children:
+            self.classes[self.find(c)].parents.append((node, cid))
+        self.n_nodes += 1
+        self.pending.append((node, cid))
+        return cid
+
+    # -- merging -------------------------------------------------------------
+    def merge(self, a: int, b: int) -> int:
+        a, b = self.find(a), self.find(b)
+        if a == b:
+            return a
+        ia, ib = self.classes[a], self.classes[b]
+        if ia.shape != ib.shape and ia.shape != () and ib.shape != ():
+            raise EGraphShapeError(
+                f"merging classes with shapes {ia.shape} vs {ib.shape}")
+        # keep the class with more parents as the root (union by size-ish)
+        if len(ia.parents) < len(ib.parents):
+            a, b = b, a
+            ia, ib = ib, ia
+        self.uf[b] = a
+        ia.nodes |= ib.nodes
+        ia.parents.extend(ib.parents)
+        ia.tensors |= ib.tensors
+        ia.related |= ib.related
+        if ia.shape == ():
+            ia.shape = ib.shape
+        self.classes.pop(b)
+        self.worklist.append(a)
+        # Re-queue parents (ops whose children gained representations) and
+        # members (constrained lemmas scan sibling reps) of the merged class.
+        for pnode, pcid in ia.parents:
+            self.pending.append((pnode, pcid))
+        for n in ib.nodes:
+            self.pending.append((n, a))
+        self.version += 1
+        return a
+
+    def rebuild(self):
+        """Congruence closure repair (egg's rebuild)."""
+        while self.worklist:
+            todo = {self.find(c) for c in self.worklist}
+            self.worklist.clear()
+            for cid in todo:
+                self._repair(cid)
+
+    def _repair(self, cid: int):
+        info = self.classes.get(cid)
+        if info is None:
+            return
+        new_parents: dict[ENode, int] = {}
+        for pnode, pcid in info.parents:
+            stale = self.hashcons.pop(pnode, None)
+            canon = pnode.canonical(self.find)
+            pcid = self.find(pcid)
+            if canon in new_parents:
+                self.merge(pcid, new_parents[canon])
+                pcid = self.find(pcid)
+            else:
+                if stale is None and canon in self.hashcons:
+                    self.merge(pcid, self.hashcons[canon])
+                    pcid = self.find(pcid)
+            new_parents[canon] = pcid
+            self.hashcons[canon] = pcid
+            # keep node sets canonical too
+            owner = self.classes.get(pcid)
+            if owner is not None:
+                owner.nodes.add(canon)
+        info.parents = list(new_parents.items())
+
+    # -- queries --------------------------------------------------------------
+    def info(self, cid: int) -> EClassInfo:
+        return self.classes[self.find(cid)]
+
+    def nodes_of(self, cid: int, op: Optional[str] = None) -> list[ENode]:
+        info = self.info(cid)
+        canon = []
+        seen = set()
+        for n in info.nodes:
+            cn = n.canonical(self.find)
+            if cn in seen:
+                continue
+            seen.add(cn)
+            if op is None or cn.op == op:
+                canon.append(cn)
+        return canon
+
+    def class_of_tensor(self, name: str, shape, dtype="f") -> int:
+        return self.add_term(mk_tensor(name, shape, dtype))
+
+    # -- saturation -----------------------------------------------------------
+    def saturate(self, lemmas: list, max_iters: int = 30,
+                 fire_counts: Optional[dict] = None,
+                 node_budget: int = 20000) -> None:
+        """Run lemma application to (bounded) fixpoint.
+
+        Each lemma is ``lemma(eg, node, cid) -> list[(Term|int, Term|int)]`` of
+        equalities to install (paper: bidirectional rewrites; the e-graph makes
+        direction irrelevant). ``node_budget`` bounds the nodes added per
+        call — exceeding it stops saturation early (a completeness/perf
+        trade, like the paper's constrained lemmas; soundness unaffected).
+        """
+        start_nodes = self.n_nodes
+        for _ in range(max_iters):
+            if self.n_nodes - start_nodes > node_budget:
+                break
+            batch = self.pending
+            self.pending = []
+            # dedupe: merges re-queue whole classes; canonicalize first
+            seen = set()
+            uniq = []
+            for node, cid in batch:
+                node = node.canonical(self.find)
+                cid = self.find(cid)
+                if (node, cid) in seen:
+                    continue
+                seen.add((node, cid))
+                uniq.append((node, cid))
+            batch = uniq
+            before = self.version
+            grew = False
+            for node, cid in batch:
+                cid = self.find(cid)
+                if cid not in self.classes:
+                    cid = self.find(cid)
+                node = node.canonical(self.find)
+                for lem in lemmas:
+                    if lem.ops is not None and node.op not in lem.ops:
+                        continue
+                    try:
+                        eqs = lem.fn(self, node, cid)
+                    except EGraphLimit:
+                        raise
+                    if not eqs:
+                        continue
+                    if fire_counts is not None:
+                        fire_counts[lem.name] = fire_counts.get(lem.name, 0) + len(eqs)
+                    for lhs, rhs in eqs:
+                        la = lhs if isinstance(lhs, int) else self.add_term(lhs)
+                        ra = rhs if isinstance(rhs, int) else self.add_term(rhs)
+                        if self.find(la) != self.find(ra):
+                            self.merge(la, ra)
+                            grew = True
+                self.rebuild()
+                if self.n_nodes - start_nodes > node_budget:
+                    break
+            if not self.pending and not grew and self.version == before:
+                break
+
+    # -- clean extraction (paper step 4) ---------------------------------------
+    def extract_clean(self, cid: int, leaf_ok: Callable[[str], bool],
+                      max_cost: int = 40) -> Optional[Term]:
+        """Find min-cost Term for class ``cid`` with interior ops in CLEAN_OPS
+        and all tensor leaves satisfying ``leaf_ok(name)``. Literal leaves are
+        allowed (they parameterize slices etc.)."""
+        return self._extract(cid, leaf_ok, clean_only=True, max_cost=max_cost)
+
+    def extract_any(self, cid: int, leaf_ok: Callable[[str], bool],
+                    max_cost: int = 60) -> Optional[tuple[Term, int]]:
+        """Extraction minimizing (#unclean ops, size) — for diagnostics.
+        Returns (term, n_unclean) or None."""
+        costs = self._bellman(cid, leaf_ok, clean_only=False, max_cost=max_cost)
+        ent = costs.get(self.find(cid))
+        if ent is None:
+            return None
+        term, (unclean, _) = ent
+        return term, unclean
+
+    def _extract(self, cid, leaf_ok, clean_only, max_cost):
+        costs = self._bellman(cid, leaf_ok, clean_only, max_cost)
+        ent = costs.get(self.find(cid))
+        return None if ent is None else ent[0]
+
+    def _bellman(self, root, leaf_ok, clean_only, max_cost,
+                 max_reach: int = 4000):
+        """Fixed-point cost propagation over the e-graph (handles cycles)."""
+        root = self.find(root)
+        # cost: (unclean_ops, nodes); clean_only treats unclean as infeasible
+        best: dict[int, tuple[Term, tuple[int, int]]] = {}
+
+        # restrict attention to classes reachable from root
+        reach: set[int] = set()
+        stack = [root]
+        while stack:
+            c = self.find(stack.pop())
+            if c in reach:
+                continue
+            reach.add(c)
+            if len(reach) > max_reach:
+                break
+            for n in self.nodes_of(c):
+                for ch in n.children:
+                    stack.append(self.find(ch))
+
+        changed = True
+        iters = 0
+        while changed and iters < 30:
+            changed = False
+            iters += 1
+            for c in reach:
+                info = self.classes.get(c)
+                if info is None:
+                    continue
+                for n in self.nodes_of(c):
+                    t_cost = self._node_cost(n, best, leaf_ok, clean_only,
+                                             info, max_cost)
+                    if t_cost is None:
+                        continue
+                    term, cost = t_cost
+                    cur = best.get(c)
+                    if cur is None or cost < cur[1]:
+                        best[c] = (term, cost)
+                        changed = True
+        return best
+
+    def _node_cost(self, n: ENode, best, leaf_ok, clean_only, info, max_cost):
+        if n.op == "tensor":
+            name = dict(n.attrs)["name"]
+            if leaf_ok(name):
+                return (Term("tensor", (), n.attrs, info.shape, info.dtype),
+                        (0, 0))
+            return None
+        if n.op == "lit":
+            return Term("lit", (), n.attrs, (), info.dtype), (0, 0)
+        unclean = 0 if n.op in CLEAN_OPS else 1
+        if clean_only and unclean:
+            return None
+        args = []
+        tot_u, tot_s = unclean, 1
+        for ch in n.children:
+            ent = best.get(self.find(ch))
+            if ent is None:
+                return None
+            args.append(ent[0])
+            tot_u += ent[1][0]
+            tot_s += ent[1][1] + 1
+        if tot_s > max_cost:
+            return None
+        term = Term(n.op, tuple(args), n.attrs, info.shape, info.dtype)
+        return term, (tot_u, tot_s)
+
+
+class EGraphShapeError(AssertionError):
+    pass
+
+
+class EGraphLimit(RuntimeError):
+    pass
+
+
+class Lemma:
+    """A rewrite rule (paper §4.2.1). ``ops``: trigger op names (None = all).
+    ``fn(eg, node, cid)`` returns equalities [(lhs, rhs), ...] as Terms or
+    class ids."""
+
+    __slots__ = ("name", "ops", "fn", "source")
+
+    def __init__(self, name: str, ops, fn, source: str = "builtin"):
+        self.name = name
+        self.ops = frozenset(ops) if ops is not None else None
+        self.fn = fn
+        self.source = source
+
+    def __repr__(self):
+        return f"Lemma({self.name})"

@@ -1,0 +1,464 @@
+"""Term IR for GraphGuard expressions.
+
+Terms are immutable, hash-consed symbolic expressions over tensors. They are
+the unit of exchange between the capture layer (jaxpr -> Graph), the EGraph
+(terms are interned as ENodes), relation inference (clean expressions are
+Terms), and the numeric evaluator (certificates are executable).
+
+Op vocabulary (normalized from jaxpr primitives by ``repro.core.capture``):
+
+  leaves      tensor(name)  lit(value)
+  rearrange   concat(xs..., dim)  slice(x, starts, limits)  transpose(x, perm)
+              reshape(x, shape)   broadcast(x, shape, bdims)  convert(x)
+  compute     matmul(a, b)        bmm(a, b)          gather_rows(tab, idx)
+              ew1 family: neg exp log tanh logistic rsqrt sqrt sin cos abs
+                          erf relu floor sign square integer_pow(p) stop_grad
+              ew2 family: add sub mul div max2 min2 pow eq lt gt and or
+              reduce_sum(x, axes) reduce_max(x, axes) reduce_min(x, axes)
+              select(pred, on_true, on_false)  iota(shape, dim)
+              dus(x, upd, starts)              cumsum(x, axis)
+              argmax(x, axis)  one_hot-ish encodings come in via eq/iota
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterable, Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Op sets
+# ---------------------------------------------------------------------------
+
+EW1_OPS = frozenset({
+    "neg", "exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "sin", "cos",
+    "abs", "erf", "relu", "floor", "sign", "square", "stop_grad", "log1p",
+    "expm1", "not",
+})
+EW2_OPS = frozenset({
+    "add", "sub", "mul", "div", "max2", "min2", "pow", "eq", "ne", "lt", "le",
+    "gt", "ge", "and", "or", "rem", "atan2", "shift_left", "shift_right",
+    "nextafter",
+})
+REDUCE_OPS = frozenset({"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                        "reduce_and", "reduce_or"})
+REARRANGE_OPS = frozenset({"concat", "slice", "transpose", "reshape",
+                           "broadcast", "convert", "rev"})
+
+# Ops permitted inside a *clean* expression (paper S3.2): element rearrangement
+# plus cross-rank reductions (sum). ``add`` is the expanded form of psum /
+# gradient accumulation. Anything else (mul/div/matmul/...) in a mapping
+# indicates the implementation requires real computation to reconstruct the
+# sequential output => bug.
+CLEAN_OPS = frozenset({"concat", "slice", "transpose", "reshape", "convert",
+                       "add", "rev", "broadcast", "iota"})
+
+
+# ---------------------------------------------------------------------------
+# Term
+# ---------------------------------------------------------------------------
+
+_intern: dict = {}
+
+
+class Term:
+    """Immutable hash-consed symbolic expression node."""
+
+    __slots__ = ("op", "args", "attrs", "shape", "dtype", "_hash",
+                 "_leaves", "_clean", "_size")
+
+    def __new__(cls, op: str, args: tuple = (), attrs: tuple = (),
+                shape: tuple = (), dtype: str = "f"):
+        key = (op, args, attrs, shape, dtype)
+        hit = _intern.get(key)
+        if hit is not None:
+            return hit
+        self = super().__new__(cls)
+        self.op = op
+        self.args = args
+        self.attrs = attrs
+        self.shape = shape
+        self.dtype = dtype
+        self._hash = hash(key)
+        self._leaves = None
+        self._clean = None
+        self._size = None
+        _intern[key] = self
+        return self
+
+    def __init__(self, *a, **k):  # state set in __new__
+        pass
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        return self is other
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def is_leaf(self) -> bool:
+        return self.op in ("tensor", "lit")
+
+    @property
+    def name(self) -> str:
+        assert self.op == "tensor"
+        return self.attrs[0][1]
+
+    @property
+    def value(self):
+        assert self.op == "lit"
+        return self.attrs[0][1]
+
+    def attr(self, key: str, default=None):
+        for k, v in self.attrs:
+            if k == key:
+                return v
+        return default
+
+    def size(self) -> int:
+        """Number of operator nodes (leaves are free; DAG-memoized)."""
+        if self._size is None:
+            self._size = 0 if self.is_leaf else \
+                1 + sum(a.size() for a in self.args)
+        return self._size
+
+    def leaves(self) -> list["Term"]:
+        """Distinct leaf terms (DAG-memoized)."""
+        if self._leaves is None:
+            if self.is_leaf:
+                self._leaves = (self,)
+            else:
+                seen, out = set(), []
+                for a in self.args:
+                    for l in a.leaves():
+                        if l not in seen:
+                            seen.add(l)
+                            out.append(l)
+                self._leaves = tuple(out)
+        return list(self._leaves)
+
+    def ops_used(self) -> set:
+        if self.is_leaf:
+            return set()
+        out = {self.op}
+        for a in self.args:
+            out |= a.ops_used()
+        return out
+
+    def is_clean(self) -> bool:
+        """All interior ops are clean rearrangement/reduction ops."""
+        if self._clean is None:
+            if self.is_leaf:
+                self._clean = True
+            elif self.op not in CLEAN_OPS:
+                self._clean = False
+            else:
+                self._clean = all(a.is_clean() for a in self.args)
+        return self._clean
+
+    def __repr__(self):
+        return pretty(self, max_depth=6)
+
+
+def pretty(t: Term, max_depth: int = 99) -> str:
+    if t.op == "tensor":
+        return t.name
+    if t.op == "lit":
+        v = t.value
+        return f"{v:g}" if isinstance(v, float) else str(v)
+    if max_depth == 0:
+        return "..."
+    inner = ", ".join(pretty(a, max_depth - 1) for a in t.args)
+    extras = ", ".join(f"{k}={v}" for k, v in t.attrs)
+    if extras:
+        inner = f"{inner}, {extras}" if inner else extras
+    return f"{t.op}({inner})"
+
+
+# ---------------------------------------------------------------------------
+# Constructors with shape inference
+# ---------------------------------------------------------------------------
+
+def tensor(name: str, shape: tuple, dtype: str = "f") -> Term:
+    return Term("tensor", (), (("name", name),), tuple(shape), dtype)
+
+
+def lit(value) -> Term:
+    if isinstance(value, (np.floating,)):
+        value = float(value)
+    if isinstance(value, (np.integer,)):
+        value = int(value)
+    if isinstance(value, bool):
+        value = int(value)
+    dt = "f" if isinstance(value, float) else "i"
+    return Term("lit", (), (("value", value),), (), dt)
+
+
+def ew1(op: str, x: Term) -> Term:
+    assert op in EW1_OPS, op
+    return Term(op, (x,), (), x.shape, x.dtype)
+
+
+def integer_pow(x: Term, p: int) -> Term:
+    return Term("integer_pow", (x,), (("p", p),), x.shape, x.dtype)
+
+
+def ew2(op: str, x: Term, y: Term) -> Term:
+    assert op in EW2_OPS, op
+    assert x.shape == y.shape or x.shape == () or y.shape == (), \
+        f"ew2 {op} shape mismatch {x.shape} vs {y.shape}"
+    shape = x.shape if x.shape else y.shape
+    dt = "b" if op in ("eq", "ne", "lt", "le", "gt", "ge", "and", "or") else \
+        (x.dtype if x.shape else y.dtype)
+    return Term(op, (x, y), (), shape, dt)
+
+
+def add(x: Term, y: Term) -> Term:
+    return ew2("add", x, y)
+
+
+def add_n(xs: Iterable[Term]) -> Term:
+    xs = list(xs)
+    out = xs[0]
+    for x in xs[1:]:
+        out = add(out, x)
+    return out
+
+
+def matmul(a: Term, b: Term) -> Term:
+    """Generalized matmul: (..., k) x (k, n) -> (..., n) (np.dot-style)."""
+    assert len(a.shape) >= 1 and len(b.shape) == 2 and a.shape[-1] == b.shape[0], \
+        f"matmul {a.shape} x {b.shape}"
+    return Term("matmul", (a, b), (), a.shape[:-1] + (b.shape[1],), a.dtype)
+
+
+def bmm(a: Term, b: Term) -> Term:
+    """Batched matmul: (..., m, k) x (..., k, n) with identical batch dims."""
+    assert len(a.shape) >= 2 and a.shape[:-2] == b.shape[:-2] and \
+        a.shape[-1] == b.shape[-2], f"bmm {a.shape} x {b.shape}"
+    return Term("bmm", (a, b), (), a.shape[:-2] + (a.shape[-2], b.shape[-1]),
+                a.dtype)
+
+
+def concat(xs: Iterable[Term], dim: int) -> Term:
+    xs = tuple(xs)
+    assert xs
+    if len(xs) == 1:
+        return xs[0]
+    base = xs[0].shape
+    for x in xs[1:]:
+        assert len(x.shape) == len(base) and all(
+            x.shape[i] == base[i] for i in range(len(base)) if i != dim), \
+            f"concat mismatch {[x.shape for x in xs]} dim={dim}"
+    shape = tuple(sum(x.shape[dim] for x in xs) if i == dim else base[i]
+                  for i in range(len(base)))
+    return Term("concat", xs, (("dim", dim),), shape, xs[0].dtype)
+
+
+def slice_(x: Term, starts: tuple, limits: tuple) -> Term:
+    starts, limits = tuple(starts), tuple(limits)
+    assert len(starts) == len(x.shape) == len(limits)
+    for s, l, d in zip(starts, limits, x.shape):
+        assert 0 <= s <= l <= d, f"slice oob {starts} {limits} of {x.shape}"
+    shape = tuple(l - s for s, l in zip(starts, limits))
+    if shape == x.shape:
+        return x
+    return Term("slice", (x,), (("starts", starts), ("limits", limits)),
+                shape, x.dtype)
+
+
+def transpose(x: Term, perm: tuple) -> Term:
+    perm = tuple(perm)
+    assert sorted(perm) == list(range(len(x.shape)))
+    if perm == tuple(range(len(x.shape))):
+        return x
+    shape = tuple(x.shape[p] for p in perm)
+    return Term("transpose", (x,), (("perm", perm),), shape, x.dtype)
+
+
+def reshape(x: Term, shape: tuple) -> Term:
+    shape = tuple(shape)
+    assert int(np.prod(shape, dtype=np.int64)) == int(np.prod(x.shape, dtype=np.int64)), \
+        f"reshape {x.shape} -> {shape}"
+    if shape == x.shape:
+        return x
+    return Term("reshape", (x,), (("shape", shape),), shape, x.dtype)
+
+
+def broadcast(x: Term, shape: tuple, bdims: tuple) -> Term:
+    """broadcast_in_dim: x's axes map to positions ``bdims`` of ``shape``."""
+    shape, bdims = tuple(shape), tuple(bdims)
+    assert len(bdims) == len(x.shape)
+    for xd, od in zip(x.shape, bdims):
+        assert xd == shape[od] or xd == 1
+    return Term("broadcast", (x,), (("shape", shape), ("bdims", bdims)),
+                shape, x.dtype)
+
+
+def convert(x: Term, dtype: str = "f") -> Term:
+    return Term("convert", (x,), (("to", dtype),), x.shape, dtype)
+
+
+def rev(x: Term, dims: tuple) -> Term:
+    return Term("rev", (x,), (("dims", tuple(dims)),), x.shape, x.dtype)
+
+
+def reduce_(op: str, x: Term, axes: tuple) -> Term:
+    axes = tuple(sorted(axes))
+    assert op in REDUCE_OPS
+    shape = tuple(d for i, d in enumerate(x.shape) if i not in axes)
+    return Term(op, (x,), (("axes", axes),), shape, x.dtype)
+
+
+def reduce_sum(x: Term, axes: tuple) -> Term:
+    return reduce_("reduce_sum", x, axes)
+
+
+def gather_rows(table: Term, idx: Term) -> Term:
+    """Embedding lookup: table (V, D) indexed by integer idx (...,) -> (..., D)."""
+    assert len(table.shape) == 2
+    return Term("gather_rows", (table, idx), (),
+                idx.shape + (table.shape[1],), table.dtype)
+
+
+def select(pred: Term, on_true: Term, on_false: Term) -> Term:
+    assert on_true.shape == on_false.shape
+    return Term("select", (pred, on_true, on_false), (), on_true.shape,
+                on_true.dtype)
+
+
+def iota(shape: tuple, dim: int, dtype: str = "i") -> Term:
+    return Term("iota", (), (("shape", tuple(shape)), ("dim", dim)),
+                tuple(shape), dtype)
+
+
+def dus(x: Term, upd: Term, starts: tuple) -> Term:
+    return Term("dus", (x, upd), (("starts", tuple(starts)),), x.shape, x.dtype)
+
+
+def cumsum(x: Term, axis: int) -> Term:
+    return Term("cumsum", (x,), (("axis", axis),), x.shape, x.dtype)
+
+
+def argmax(x: Term, axis: int) -> Term:
+    shape = tuple(d for i, d in enumerate(x.shape) if i != axis)
+    return Term("argmax", (x,), (("axis", axis),), shape, "i")
+
+
+def opaque(name: str, args: tuple, shape: tuple, dtype: str = "f",
+           attrs: tuple = ()) -> Term:
+    """Uninterpreted operator (user kernels without lemmas)."""
+    return Term(f"opaque:{name}", tuple(args), attrs, tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Numeric evaluation (numpy) — used by property tests and certificate replay
+# ---------------------------------------------------------------------------
+
+def _np_ew1(op: str) -> Callable:
+    return {
+        "neg": np.negative, "exp": np.exp, "log": np.log, "tanh": np.tanh,
+        "logistic": lambda x: 1 / (1 + np.exp(-x)), "rsqrt": lambda x: 1 / np.sqrt(x),
+        "sqrt": np.sqrt, "sin": np.sin, "cos": np.cos, "abs": np.abs,
+        "erf": _erf, "relu": lambda x: np.maximum(x, 0), "floor": np.floor,
+        "sign": np.sign, "square": np.square, "stop_grad": lambda x: x,
+        "log1p": np.log1p, "expm1": np.expm1, "not": np.logical_not,
+    }[op]
+
+
+def _erf(x):
+    v = np.vectorize(math.erf)
+    return v(x).astype(np.asarray(x).dtype) if np.asarray(x).dtype.kind == "f" else v(x)
+
+
+def _np_ew2(op: str) -> Callable:
+    return {
+        "add": np.add, "sub": np.subtract, "mul": np.multiply,
+        "div": np.divide, "max2": np.maximum, "min2": np.minimum,
+        "pow": np.power, "eq": np.equal, "ne": np.not_equal, "lt": np.less,
+        "le": np.less_equal, "gt": np.greater, "ge": np.greater_equal,
+        "and": np.logical_and, "or": np.logical_or, "rem": np.remainder,
+        "atan2": np.arctan2, "nextafter": np.nextafter,
+        "shift_left": np.left_shift, "shift_right": np.right_shift,
+    }[op]
+
+
+def eval_term(t: Term, env: dict) -> np.ndarray:
+    """Evaluate a term against ``env: name -> ndarray``."""
+    memo: dict = {}
+
+    def go(u: Term):
+        if u in memo:
+            return memo[u]
+        r = _eval1(u, go, env)
+        memo[u] = r
+        return r
+
+    return go(t)
+
+
+def _eval1(u: Term, go, env):
+    op = u.op
+    if op == "tensor":
+        return np.asarray(env[u.name])
+    if op == "lit":
+        return np.asarray(u.value)
+    if op in EW1_OPS:
+        return _np_ew1(op)(go(u.args[0]))
+    if op == "integer_pow":
+        return go(u.args[0]) ** u.attr("p")
+    if op in EW2_OPS:
+        return _np_ew2(op)(go(u.args[0]), go(u.args[1]))
+    if op == "matmul" or op == "bmm":
+        return go(u.args[0]) @ go(u.args[1])
+    if op == "concat":
+        return np.concatenate([go(a) for a in u.args], axis=u.attr("dim"))
+    if op == "slice":
+        starts, limits = u.attr("starts"), u.attr("limits")
+        return go(u.args[0])[tuple(slice(s, l) for s, l in zip(starts, limits))]
+    if op == "transpose":
+        return np.transpose(go(u.args[0]), u.attr("perm"))
+    if op == "reshape":
+        return np.reshape(go(u.args[0]), u.attr("shape"))
+    if op == "broadcast":
+        x, shape, bdims = go(u.args[0]), u.attr("shape"), u.attr("bdims")
+        expanded = np.reshape(x, tuple(
+            x.shape[bdims.index(i)] if i in bdims else 1
+            for i in range(len(shape))))
+        return np.broadcast_to(expanded, shape)
+    if op == "convert":
+        return go(u.args[0]).astype(np.float64 if u.attr("to") == "f"
+                                    else np.int64 if u.attr("to") == "i" else bool)
+    if op == "rev":
+        x = go(u.args[0])
+        idx = tuple(slice(None, None, -1) if i in u.attr("dims") else slice(None)
+                    for i in range(x.ndim))
+        return x[idx]
+    if op in REDUCE_OPS:
+        fn = {"reduce_sum": np.sum, "reduce_max": np.max, "reduce_min": np.min,
+              "reduce_prod": np.prod, "reduce_and": np.all,
+              "reduce_or": np.any}[op]
+        return fn(go(u.args[0]), axis=u.attr("axes"))
+    if op == "gather_rows":
+        return go(u.args[0])[go(u.args[1]).astype(np.int64)]
+    if op == "select":
+        return np.where(go(u.args[0]).astype(bool), go(u.args[1]), go(u.args[2]))
+    if op == "iota":
+        shape, dim = u.attr("shape"), u.attr("dim")
+        out = np.arange(shape[dim])
+        out = np.reshape(out, tuple(shape[dim] if i == dim else 1
+                                    for i in range(len(shape))))
+        return np.broadcast_to(out, shape)
+    if op == "dus":
+        x = np.array(go(u.args[0]))
+        upd = go(u.args[1])
+        starts = u.attr("starts")
+        idx = tuple(slice(s, s + d) for s, d in zip(starts, upd.shape))
+        x[idx] = upd
+        return x
+    if op == "cumsum":
+        return np.cumsum(go(u.args[0]), axis=u.attr("axis"))
+    if op == "argmax":
+        return np.argmax(go(u.args[0]), axis=u.attr("axis"))
+    raise NotImplementedError(f"eval of {op}")

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+The paper's contribution is verification tooling (no kernel-level claims);
+these kernels are the framework's optional fast paths, written for TPU
+(pl.pallas_call + BlockSpec VMEM tiling) and validated on CPU with
+interpret=True against the pure-jnp oracles in ref.py.
+"""
+from . import ops, ref

@@ -1,0 +1,93 @@
+"""Flash-attention forward Pallas TPU kernel (online softmax).
+
+Grid: (batch*heads, q_blocks). Each program holds one (block_q, hd) query
+tile in VMEM and streams K/V tiles of (block_k, hd) from HBM, maintaining
+the running max / normalizer (m, l) of the online-softmax recurrence — the
+TPU adaptation of the FlashAttention schedule: instead of CUDA warps and
+shared-memory tiles, tiles are MXU-aligned (block_q, block_k multiples of
+128 when the sequence allows) VMEM blocks, and the inner K loop is a
+``lax.fori_loop`` inside the kernel body so the working set stays
+O(block_q * (hd + block_k)).
+
+Causal masking skips fully-masked K tiles via the loop upper bound.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
+                  scale: float):
+    _, bq, hd = q_ref.shape
+    Sk = k_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32) * scale
+    iq = pl.program_id(1)
+
+    def body(ik, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.dslice(ik * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(ik * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = q @ k.T                                      # (bq, bk)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    if causal:
+        # K tiles strictly above the diagonal are skipped entirely
+        n_k = ((iq + 1) * bq + block_k - 1) // block_k
+    else:
+        n_k = Sk // block_k
+    acc, m, l = jax.lax.fori_loop(0, n_k, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, scale=None,
+                    interpret: bool = False):
+    """q,k,v: (B, S, H, hd) (same head count; expand GQA beforehand)."""
+    B, S, H, hd = q.shape
+    scale = scale or hd ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    while S % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+    # fold batch and heads into the grid's first axis
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    grid = (B * H, S // bq)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=bk, causal=causal,
+                          scale=scale),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Jit'd wrappers for the Pallas kernels (interpret=True on CPU)."""
+import functools
+
+import jax
+
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+INTERPRET = not _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm_op(x, scale, eps=1e-6, block_rows=256):
+    return rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                   interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention_op(q, k, v, causal=True, block_q=128, block_k=128):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=INTERPRET)

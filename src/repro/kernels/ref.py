@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    """x: (..., D); scale: (D,). Gemma-style (1+scale) RMSNorm."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """q,k,v: (B, S, H, hd) (same H). Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    scale = scale or hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)) \
+        .astype(q.dtype)

@@ -1,0 +1,54 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+HBM -> VMEM tiling: rows are processed in blocks of ``block_rows`` with the
+full feature dim resident in VMEM (d_model up to ~8192 fits comfortably:
+block_rows*D*4B << 128 MiB VMEM when block_rows <= 256). The reduction, the
+rsqrt, and the (1+scale) multiply fuse into one pass over HBM — on TPU this
+turns three HBM round-trips (square+mean, normalize, scale) into one.
+
+Feature dim is padded to the 128-lane boundary by construction (all
+assigned configs have d_model % 128 == 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (block_rows, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + s_ref[...].astype(jnp.float32))) \
+        .astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    """x: (..., D) -> same shape; scale: (D,)."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, D)
+    br = min(block_rows, rows)
+    while rows % br:
+        br //= 2
+    br = max(br, 1)
+    grid = (rows // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((rows, D), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),       # row tile in VMEM
+            pl.BlockSpec((D,), lambda i: (0,)),            # scale resident
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)

@@ -1,0 +1,77 @@
+"""Production meshes and divisibility-aware sharding rules."""
+from __future__ import annotations
+
+import jax
+
+from ..models.config import ModelConfig
+from ..sharding.specs import ShardingRules, default_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) (data, model) = 256 chips (TPU v5e pod).
+    Multi-pod: (2, 16, 16) (pod, data, model) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def rules_for_config(cfg: ModelConfig, mesh,
+                     base: ShardingRules | None = None) -> ShardingRules:
+    """Adapt the default rules to the architecture: any logical dim not
+    divisible by its mesh axis falls back to replication (e.g. 10 heads on a
+    16-way model axis). This keeps every assigned arch lowerable on the
+    production mesh without per-arch hand tuning."""
+    rules = base or default_rules(multi_pod="pod" in mesh.axis_names)
+    model_n = mesh_axis_size(mesh, "model")
+    data_n = mesh_axis_size(mesh, "data")
+
+    def ok(dim_size, n):
+        return dim_size % n == 0 and dim_size >= n
+
+    upd = {}
+    if not ok(cfg.n_heads, model_n):
+        # replicate attention heads when they don't divide the TP axis —
+        # a fused (H*hd) fallback misaligns head boundaries and forces
+        # involuntary resharding inside the attention einsums.
+        upd["heads"] = None
+        upd["act_heads"] = None
+    if not ok(cfg.n_kv_heads, model_n):
+        upd["kv_heads"] = None
+    if cfg.d_ff and not ok(cfg.d_ff, model_n):
+        upd["ff"] = None
+        upd["act_ff"] = None
+    if cfg.vocab % model_n:
+        upd["vocab"] = None
+    if cfg.n_experts and not ok(cfg.n_experts, model_n):
+        upd["experts"] = None
+    if cfg.n_experts and ok(cfg.moe_d_ff, data_n):
+        upd["expert_fsdp"] = "data"
+    # Parameter sharding plan: ZeRO-1 by default (params model-sharded,
+    # replicated over data; optimizer state sharded over data — see
+    # build_train). Full FSDP (params' embed dim over data) only when the
+    # model-sharded params alone exceed half of HBM, because XLA's SPMD
+    # backward for FSDP-sharded weights all-gathers batch activations
+    # (measured in EXPERIMENTS.md SPerf).
+    from ..models import registry as _registry
+    param_gib = _registry.n_params(cfg) * 2 / 2**30
+    if param_gib / max(model_n, 1) < 8.0:
+        upd["embed_fsdp"] = None
+        upd["expert_fsdp"] = None
+    if cfg.d_model % data_n:
+        upd["embed_fsdp"] = None
+    # ssm/hybrid channel dims
+    if cfg.family == "ssm":
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        if ch % model_n or (cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads) % model_n:
+            upd["heads"] = None
+        if not ok(cfg.ssm_heads, model_n):
+            upd.setdefault("heads", None)
+    if cfg.family == "hybrid" and cfg.lru_width % model_n:
+        upd["ff"] = None
+        upd["act_ff"] = None
+    return rules.with_(**upd)

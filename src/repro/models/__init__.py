@@ -1,0 +1,2 @@
+from .config import ModelConfig, InputShape, INPUT_SHAPES
+from . import registry

@@ -1,0 +1,247 @@
+"""RecurrentGemma / Griffin hybrid family: RG-LRU recurrent blocks
+interleaved with local sliding-window attention (arXiv:2402.19427).
+
+Pattern ("recurrent", "recurrent", "local") repeats; remainder layers (26 %
+3 == 2 for recurrentgemma-2b) get an unscanned tail — see DESIGN.md.
+
+The RG-LRU linear recurrence h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t) is
+evaluated with ``jax.lax.associative_scan`` over the sequence (the TPU
+adaptation of the paper's fused GPU scan kernel); decode is an O(1) update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.specs import constrain
+from .config import ModelConfig
+from . import layers as L
+from . import dense
+
+
+C_COEF = 8.0  # Griffin's `c` constant
+
+
+def rglru_spec(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "norm": L.norm_spec(d),
+        "in_x": L.Leaf((d, w), ("embed_fsdp", "ff")),
+        "in_gate": L.Leaf((d, w), ("embed_fsdp", "ff")),
+        "conv_w": L.Leaf((4, w), ("conv", "ff")),
+        "conv_b": L.Leaf((w,), ("ff",), scale=0.0),
+        "w_input_gate": L.Leaf((w, w), (None, "ff")),
+        "w_rec_gate": L.Leaf((w, w), (None, "ff")),
+        "lambda_p": L.Leaf((w,), ("ff",), scale=-1.0),
+        "out": L.Leaf((w, d), ("ff", "embed_fsdp")),
+    }
+
+
+def attn_block_spec(cfg: ModelConfig) -> dict:
+    return {
+        "pre_attn": L.norm_spec(cfg.d_model),
+        "attn": L.attn_spec(cfg),
+    }
+
+
+def block_spec(cfg: ModelConfig, role: str) -> dict:
+    base = {"pre_mlp": L.norm_spec(cfg.d_model),
+            "mlp": L.mlp_spec(cfg, geglu=True)}
+    if role == "recurrent":
+        base["rglru"] = rglru_spec(cfg)
+    else:
+        base.update(attn_block_spec(cfg))
+    return base
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    P = len(cfg.pattern)
+    reps, tail = cfg.n_layers // P, cfg.n_layers % P
+    spec = dict(L.embed_spec(cfg))
+    spec["blocks"] = {f"p{i}": L.stack_spec(block_spec(cfg, role), reps)
+                      for i, role in enumerate(cfg.pattern)}
+    if tail:
+        spec["tail"] = {f"p{i}": block_spec(cfg, cfg.pattern[i])
+                        for i in range(tail)}
+    spec["final_norm"] = L.norm_spec(cfg.d_model)
+    return spec
+
+
+def _rglru_scan(a, bx, h0=None):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan. a,bx: (B,S,W)."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_block(p, cfg: ModelConfig, x, state=None, conv_state=None,
+                decode=False):
+    """Returns (y, new_state, new_conv_state)."""
+    h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["in_gate"])
+    u = h @ p["in_x"]
+    # causal depthwise conv (window 4)
+    if decode:
+        win = jnp.concatenate([conv_state, u.astype(conv_state.dtype)], axis=1)
+        u = jnp.einsum("bkc,kc->bc", win, p["conv_w"])[:, None] + p["conv_b"]
+        new_conv = win[:, 1:]
+    else:
+        K = p["conv_w"].shape[0]
+        acc = u * p["conv_w"][K - 1]
+        for k in range(1, K):
+            acc = acc + jnp.pad(u, ((0, 0), (k, 0), (0, 0)))[:, :-k] \
+                * p["conv_w"][K - 1 - k]
+        u = acc + p["conv_b"]
+        new_conv = None
+    # RG-LRU
+    i_t = jax.nn.sigmoid(u @ p["w_input_gate"])
+    r_t = jax.nn.sigmoid(u @ p["w_rec_gate"])
+    log_a = -C_COEF * r_t * jax.nn.softplus(p["lambda_p"])
+    a_t = jnp.exp(log_a)
+    scaled = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    bx = scaled * (i_t * u)
+    if decode:
+        new_state = (a_t[:, 0] * state + bx[:, 0]).astype(jnp.float32)
+        hidden = new_state[:, None]
+    else:
+        hidden = _rglru_scan(a_t, bx)
+        new_state = hidden[:, -1].astype(jnp.float32)
+    y = ((hidden * gate) @ p["out"]).astype(x.dtype)
+    return y, new_state, new_conv
+
+
+def _apply_block(p, cfg, x, role, positions, angles):
+    if role == "recurrent":
+        y, _, _ = rglru_block(p["rglru"], cfg, x)
+        x = x + y
+    else:
+        h, _ = L.attention(p["attn"], cfg,
+                           L.rmsnorm(x, p["pre_attn"], cfg.norm_eps),
+                           positions, causal=True, window=cfg.window,
+                           angles=angles)
+        x = x + h
+    x = x + L.mlp(p["mlp"], L.rmsnorm(x, p["pre_mlp"], cfg.norm_eps))
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None,
+            return_hidden=False, **_):
+    B, S = tokens.shape
+    x = L.embed(params, cfg, tokens)
+    if positions is None:
+        positions = jnp.arange(S)
+    angles = L.rope_angles(jnp.broadcast_to(positions[None], (B, S)),
+                           cfg.hd, cfg.rope_theta)
+    P = len(cfg.pattern)
+    reps, tail = cfg.n_layers // P, cfg.n_layers % P
+
+    ab = jax.checkpoint(_apply_block, static_argnums=(1, 3)) \
+        if cfg.remat else _apply_block
+
+    def body(xc, blk):
+        for i, role in enumerate(cfg.pattern):
+            xc = ab(blk[f"p{i}"], cfg, xc, role, positions, angles)
+        return xc, None
+
+    wrapped = body  # per-block checkpoints
+    if cfg.scan_layers and reps:
+        x, _ = jax.lax.scan(wrapped, x, params["blocks"])
+    else:
+        for g in range(reps):
+            blk = jax.tree.map(lambda a, g=g: a[g], params["blocks"])
+            x, _ = wrapped(x, blk)
+    for i in range(tail):
+        x = _apply_block(params["tail"][f"p{i}"], cfg, x, cfg.pattern[i],
+                         positions, angles)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, None
+    return L.unembed(params, cfg, x), None
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract=False):
+    P = len(cfg.pattern)
+    reps, tail = cfg.n_layers // P, cfg.n_layers % P
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract \
+        else (lambda s, dt: jnp.zeros(s, dt))
+    cache = {}
+    for i, role in enumerate(cfg.pattern):
+        if role == "recurrent":
+            cache[f"p{i}"] = {
+                "state": mk((reps, batch, cfg.lru_width), jnp.float32),
+                "conv": mk((reps, batch, 3, cfg.lru_width), cfg.jdtype),
+            }
+        else:
+            C = min(cfg.window, max_seq)
+            shape = (reps, batch, C, cfg.n_kv_heads, cfg.hd)
+            cache[f"p{i}"] = {"k": mk(shape, cfg.jdtype),
+                              "v": mk(shape, cfg.jdtype)}
+    for i in range(tail):
+        role = cfg.pattern[i]
+        if role == "recurrent":
+            cache[f"tail{i}"] = {
+                "state": mk((batch, cfg.lru_width), jnp.float32),
+                "conv": mk((batch, 3, cfg.lru_width), cfg.jdtype),
+            }
+        else:
+            C = min(cfg.window, max_seq)
+            shape = (batch, C, cfg.n_kv_heads, cfg.hd)
+            cache[f"tail{i}"] = {"k": mk(shape, cfg.jdtype),
+                                 "v": mk(shape, cfg.jdtype)}
+    return cache
+
+
+def _decode_block(p, cfg, x, c, role, pos):
+    if role == "recurrent":
+        y, ns, ncv = rglru_block(p["rglru"], cfg, x, state=c["state"],
+                                 conv_state=c["conv"], decode=True)
+        x = x + y
+        nc = {"state": ns, "conv": ncv}
+    else:
+        h = L.rmsnorm(x, p["pre_attn"], cfg.norm_eps)
+        h, ck, cv = L.attention_decode(p["attn"], cfg, h, c["k"], c["v"],
+                                       pos, window=cfg.window)
+        x = x + h
+        nc = {"k": ck, "v": cv}
+    x = x + L.mlp(p["mlp"], L.rmsnorm(x, p["pre_mlp"], cfg.norm_eps))
+    return x, nc
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    x = L.embed(params, cfg, token)
+    P = len(cfg.pattern)
+    reps, tail = cfg.n_layers // P, cfg.n_layers % P
+
+    def body(xc, blk_and_cache):
+        blk, caches = blk_and_cache
+        new = {}
+        for i, role in enumerate(cfg.pattern):
+            xc, nc = _decode_block(blk[f"p{i}"], cfg, xc, caches[f"p{i}"],
+                                   role, pos)
+            new[f"p{i}"] = nc
+        return xc, new
+
+    scan_cache = {k: v for k, v in cache.items() if k.startswith("p")}
+    if reps:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], scan_cache))
+    else:
+        new_cache = {}
+    for i in range(tail):
+        x, nc = _decode_block(params["tail"][f"p{i}"], cfg, x,
+                              cache[f"tail{i}"], cfg.pattern[i], pos)
+        new_cache[f"tail{i}"] = nc
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params, cfg, x), new_cache

@@ -1,0 +1,94 @@
+"""Architecture registry: uniform API over the six model families."""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import dense, encdec, hybrid, layers as L, moe, ssm
+
+
+_FAMILY = {
+    "dense": dense, "vlm": dense, "moe": moe, "ssm": ssm,
+    "hybrid": hybrid, "audio": encdec,
+}
+
+ARCH_IDS = [
+    "gemma3-27b", "mixtral-8x7b", "mamba2-1.3b", "kimi-k2-1t-a32b",
+    "recurrentgemma-2b", "qwen2-vl-2b", "gemma3-12b", "whisper-medium",
+    "yi-9b", "command-r-35b",
+]
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    return family_module(cfg).model_spec(cfg)
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    return L.init_tree(model_spec(cfg), rng, cfg.jdtype)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return L.abstract_tree(model_spec(cfg), cfg.jdtype)
+
+
+def logical_axes(cfg: ModelConfig) -> dict:
+    return L.logical_tree(model_spec(cfg))
+
+
+def forward(params, cfg: ModelConfig, batch: dict, return_hidden=False):
+    """batch: {tokens, positions?, patch_embeds?, frames?} -> (logits, extras)"""
+    mod = family_module(cfg)
+    kwargs = {}
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        kwargs["patch_embeds"] = batch["patch_embeds"]
+    if cfg.family == "audio":
+        kwargs["frames"] = batch["frames"]
+    return mod.forward(params, cfg, batch["tokens"],
+                       positions=batch.get("positions"),
+                       return_hidden=return_hidden, **kwargs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract=False):
+    return family_module(cfg).init_cache(cfg, batch, max_seq, abstract)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    return family_module(cfg).decode_step(params, cfg, cache, token, pos)
+
+
+def load_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def n_params(cfg: ModelConfig) -> int:
+    spec = model_spec(cfg)
+    leaves = jax.tree.leaves(spec, is_leaf=L.is_leaf)
+    total = 0
+    for lf in leaves:
+        n = 1
+        for d in lf.shape:
+            n *= d
+        total += n
+    return total
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: top_k of n_experts)."""
+    total = n_params(cfg)
+    if cfg.n_experts and cfg.top_k:
+        expert_p = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts \
+            * cfg.n_layers
+        active = expert_p * cfg.top_k // cfg.n_experts
+        return total - expert_p + active
+    return total

@@ -1,0 +1,203 @@
+"""Mamba2 (state-space duality / SSD) family — attention-free.
+
+Implements the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the semiseparable matrix is
+applied quadratically (MXU-friendly), across chunks a linear recurrence on
+the (H, N, P) state is scanned. Decode is O(1): a single state update.
+
+TPU adaptation notes (DESIGN.md §2): the CUDA kernel's warp-level scan is
+replaced by chunk-local einsums (MXU) + ``lax.scan`` over chunk states; the
+depthwise causal conv1d is expressed as shifted adds (no im2col), which XLA
+fuses on TPU.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.specs import constrain
+from .config import ModelConfig
+from . import layers as L
+
+
+def block_spec(cfg: ModelConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = din + 2 * N   # x plus single-group B and C
+    return {
+        "norm": L.norm_spec(d),
+        "in_proj": L.Leaf((d, 2 * din + 2 * N + H), ("embed_fsdp", "heads")),
+        "conv_w": L.Leaf((cfg.ssm_conv, conv_ch), ("conv", "heads")),
+        "conv_b": L.Leaf((conv_ch,), ("heads",), scale=0.0),
+        "A_log": L.Leaf((H,), ("heads",), scale=-1.0),
+        "D": L.Leaf((H,), ("heads",), scale=-1.0),
+        "dt_bias": L.Leaf((H,), ("heads",), scale=0.0),
+        "out_norm": L.Leaf((din,), ("heads",), scale=0.0),
+        "out_proj": L.Leaf((din, d), ("heads", "embed_fsdp")),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    spec = dict(L.embed_spec(cfg))
+    spec["blocks"] = L.stack_spec(block_spec(cfg), cfg.n_layers)
+    spec["final_norm"] = L.norm_spec(cfg.d_model)
+    return spec
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B,S,C), w (K,C) — as K shifted adds."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for k in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k]
+        out = out + shifted * w[K - 1 - k]
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(cfg, proj):
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xBC = proj[..., din:2 * din + 2 * N]
+    dt = proj[..., 2 * din + 2 * N:]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD scan. x: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) < 0,
+    Bm/Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} not divisible by chunk {chunk}"
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    xdt = xc * dtc[..., None]                       # (b,c,q,h,p)
+    dA = dtc * A[None, None, None, :]               # (b,c,q,h) negative
+    cs = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+
+    # intra-chunk (quadratic within chunk, MXU-friendly)
+    Lmat = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (b,c,q,t,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], Lmat, 0.0)
+    CB = jnp.einsum("bcqn,bctn->bcqt", Cc, Bc)      # (b,c,q,t)
+    y_diag = jnp.einsum("bcqt,bcqth,bcthp->bcqhp", CB, Lmat, xdt)
+
+    # chunk states + inter-chunk recurrence
+    decay_out = jnp.exp(cs[:, :, -1:, :] - cs)      # (b,c,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, decay_out, xdt)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])          # (b,c,h)
+
+    def scan_fn(S, inp):
+        st, dec = inp
+        S_new = S * dec[:, :, None, None] + st
+        return S_new, S                              # emit state *before*
+
+    S0 = jnp.zeros((b, h, n, p), states.dtype) if init_state is None \
+        else init_state.astype(states.dtype)
+    final, S_prev = jax.lax.scan(
+        scan_fn, S0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)              # (b,c,h,n,p)
+
+    decay_in = jnp.exp(cs)                           # (b,c,q,h)
+    y_off = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, S_prev, decay_in)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def _apply_block(p, cfg, x):
+    B, S, D = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = h @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :din].reshape(B, S, H, P)
+    Bm = xBC[..., din:din + N]
+    Cm = xBC[..., din + N:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(B, S, din) * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    return x + (y @ p["out_proj"]).astype(x.dtype)
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None,
+            return_hidden=False, **_):
+    x = L.embed(params, cfg, tokens)
+
+    def body(xc, blk):
+        return _apply_block(blk, cfg, xc), None
+
+    wrapped = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(wrapped, x, params["blocks"])
+    else:
+        for l in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a, l=l: a[l], params["blocks"])
+            x, _ = wrapped(x, blk)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, None
+    return L.unembed(params, cfg, x), None
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) state update per token
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract=False):
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * N
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract \
+        else (lambda s, dt: jnp.zeros(s, dt))
+    return {
+        "ssm_state": mk((cfg.n_layers, batch, H, N, P), jnp.float32),
+        "conv_state": mk((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch),
+                         cfg.jdtype),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    x = L.embed(params, cfg, token)     # (B, 1, D)
+    B = x.shape[0]
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    def body(xc, blk_and_cache):
+        p, (S_state, conv_state) = blk_and_cache
+        h = L.rmsnorm(xc, p["norm"], cfg.norm_eps)
+        proj = (h @ p["in_proj"])[:, 0]              # (B, ...)
+        z, xBC, dt = _split_proj(cfg, proj)
+        # conv: window = [conv_state ; xBC]
+        win = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)
+        conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+        conv_out = jax.nn.silu(conv_out)
+        new_conv = win[:, 1:]
+        xs = conv_out[..., :din].reshape(B, H, P)
+        Bm = conv_out[..., din:din + N]
+        Cm = conv_out[..., din + N:]
+        dtv = jax.nn.softplus(dt + p["dt_bias"])     # (B, H)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dA = jnp.exp(dtv * A[None, :])               # (B, H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bm, dtv, xs)
+        S_new = S_state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm, S_new.astype(Cm.dtype))
+        y = y + xs * p["D"][None, :, None]
+        y = y.reshape(B, 1, din) * jax.nn.silu(z)[:, None]
+        y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps)
+        xc = xc + y @ p["out_proj"]
+        return xc, (S_new, new_conv)
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["blocks"],
+                  (cache["ssm_state"], cache["conv_state"])))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"ssm_state": new_cache[0], "conv_state": new_cache[1]}

@@ -1,0 +1,2 @@
+from .specs import (ShardingRules, default_rules, use_sharding, constrain,
+                    tree_shardings, active_mesh)

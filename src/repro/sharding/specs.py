@@ -1,0 +1,114 @@
+"""Logical-axis sharding: rules mapping logical tensor axes to mesh axes.
+
+Model code annotates activations/params with *logical* axis names
+("batch", "embed", "heads", ...). A ``ShardingRules`` table maps those to
+mesh axes; ``logical_to_spec`` builds a PartitionSpec; ``constrain`` applies
+``with_sharding_constraint`` when a mesh is active (no-op otherwise, so the
+same model code runs in single-device smoke tests, GraphGuard capture, and
+512-chip dry-runs).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Axis = Union[None, str, tuple]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    rules: dict
+
+    def spec_for(self, logical_axes: tuple) -> P:
+        entries = []
+        for ax in logical_axes:
+            if ax is None:
+                entries.append(None)
+            else:
+                entries.append(self.rules.get(ax))
+        return P(*entries)
+
+    def with_(self, **updates) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(updates)
+        return ShardingRules(d)
+
+
+# The baseline production plan: data-parallel batch over (pod, data),
+# tensor-parallel model dims over model; parameters ZeRO/FSDP-sharded over
+# data on their non-tensor dim ("embed_fsdp" is used for *parameters only*).
+def default_rules(multi_pod: bool = False, fsdp: bool = True) -> ShardingRules:
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules({
+        "batch": data_axes,
+        "seq": None,
+        "embed": None,
+        "embed_fsdp": "data" if fsdp else None,   # parameter-only dim
+        "heads": "model",
+        "kv_heads": "model",
+        "qheads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_ff": None,
+        "expert_fsdp": "data" if fsdp else None,
+        "act_ff": "model",       # activation hidden dim (TP)
+        "act_heads": "model",    # activation heads dim (TP)
+        "layers": None,
+        "state": None,
+        "kv_seq": None,
+        "conv": None,
+    })
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    prev = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh, _ctx.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ctx.mesh
+
+
+def constrain(x, logical_axes: tuple):
+    """Apply a sharding constraint if a mesh is active; identity otherwise."""
+    if _ctx.mesh is None or _ctx.rules is None:
+        return x
+    spec = _ctx.rules.spec_for(logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ctx.mesh, spec))
+
+
+def _is_axes_leaf(x):
+    """A logical-axes leaf is a tuple of axis names / None — NOT a tuple of
+    tuples (e.g. a (k, v) cache pair), which is tree structure."""
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, logical_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.spec_for(axes)),
+        logical_tree, is_leaf=_is_axes_leaf)

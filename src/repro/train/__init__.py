@@ -1,0 +1,2 @@
+from .loop import make_train_step, make_loss_fn, TrainConfig
+from . import serve

@@ -1,0 +1,55 @@
+"""Serving: prefill + batched single-token decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import registry
+from ..models.config import ModelConfig
+
+
+def prefill_logits(params, cfg: ModelConfig, batch: dict):
+    """Parallel prefill compute (the cost profile of the prefill_32k shape)."""
+    logits, _ = registry.forward(params, cfg, batch)
+    return logits
+
+
+def sequential_prefill(params, cfg: ModelConfig, tokens, max_seq: int):
+    """Build a KV cache by scanning decode_step over the prompt (universal
+    across families; used by the serving example at small scale)."""
+    B, S = tokens.shape
+    cache = registry.init_cache(cfg, B, max_seq)
+
+    def body(carry, i):
+        cache = carry
+        logits, cache = registry.decode_step(
+            params, cfg, cache, jax.lax.dynamic_slice(tokens, (0, i), (B, 1)),
+            i)
+        return cache, logits[:, 0]
+
+    cache, logits = jax.lax.scan(body, cache, jnp.arange(S))
+    return cache, jnp.swapaxes(logits, 0, 1)   # (B, S, V)
+
+
+def decode_tokens(params, cfg: ModelConfig, cache, last_token, start_pos,
+                  n_steps: int, temperature: float = 0.0, rng=None):
+    """Greedy (or sampled) generation of n_steps tokens."""
+    B = last_token.shape[0]
+
+    def body(carry, i):
+        cache, tok, rng_ = carry
+        logits, cache = registry.decode_step(params, cfg, cache, tok,
+                                             start_pos + i)
+        logits = logits[:, 0]
+        if temperature > 0.0:
+            rng_, sub = jax.random.split(rng_)
+            nxt = jax.random.categorical(sub, logits / temperature)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)[:, None]
+        return (cache, nxt, rng_), nxt[:, 0]
+
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    (cache, _, _), toks = jax.lax.scan(
+        body, (cache, last_token, rng), jnp.arange(n_steps))
+    return cache, jnp.swapaxes(toks, 0, 1)     # (B, n_steps)

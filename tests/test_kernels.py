@@ -1,0 +1,57 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 16, 256), (1, 7, 384),
+                                   (3, 5, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    s = jnp.asarray(rng.normal(size=shape[-1:]) * 0.1, dtype)
+    got = rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,hd", [(1, 128, 2, 64), (2, 256, 1, 32),
+                                      (1, 64, 4, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, S, H, hd, causal, dtype):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_blocks_sweep():
+    rng = np.random.default_rng(2)
+    B, S, H, hd = 1, 128, 1, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    for bq in (32, 64, 128):
+        for bk in (32, 64, 128):
+            got = flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=2e-4, rtol=2e-4)
