@@ -1,0 +1,26 @@
+# CI entry points (see also scripts/ci.sh for environments without make)
+
+PY ?= python
+PYTEST ?= $(PY) -m pytest
+
+.PHONY: verify quick bench-smoke bench bug-suite
+
+# tier-1 gate: full test suite
+verify:
+	PYTHONPATH=src $(PYTEST) -x -q
+
+# fast gate: skip the heavy per-architecture model smoke tests
+quick:
+	PYTHONPATH=src $(PYTEST) -x -q -m "not slow"
+
+# verification benchmark sections only, single repeat — CI smoke
+bench-smoke:
+	$(PY) benchmarks/run.py --smoke
+
+# full benchmark incl. engine ablation; writes BENCH_verify.json
+bench:
+	$(PY) benchmarks/run.py
+
+# reproduce the paper §6.2 six-bug case study
+bug-suite:
+	PYTHONPATH=src $(PY) examples/verify_bug_suite.py

@@ -1,17 +1,30 @@
 """Benchmark harness — one section per paper table/figure.
 
-  fig4   end-to-end verification time per model/strategy   (paper Fig. 4)
-  fig5   scaling vs parallelism degree                     (paper Fig. 5)
-  fig6   lemma-library effort: count + complexity          (paper Fig. 6)
-  fig7   lemma application counts per case                 (paper Fig. 7)
+  fig4      end-to-end verification time per model/strategy   (paper Fig. 4)
+  fig5      scaling vs parallelism degree                     (paper Fig. 5)
+  ablation  sp_moe deg 8: optimized engine vs the same commit
+            with dispatch/extraction optimizations disabled
+  fig6      lemma-library effort: count + complexity          (paper Fig. 6)
+  fig7      lemma application counts per case                 (paper Fig. 7)
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = e-graph nodes or
-counts, per section).
+counts, per section) and writes machine-readable ``BENCH_verify.json``
+(per-case wall/infer time, e-graph nodes, lemma fires, per-phase timers;
+warmup + median-of-N repeats) so the perf trajectory is tracked across PRs.
+
+    python benchmarks/run.py [--smoke] [--repeats N] [--json PATH]
 """
+import argparse
+import json
+import os
+import statistics
 import sys
 import time
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+REPEATS = 3
 
 
 def _cases():
@@ -19,66 +32,161 @@ def _cases():
     return run_case
 
 
-def fig4_verification_time(rows):
+def _timed_case(run_case, case, degree=2, repeats=None):
+    """Warmup once, then median-of-N: returns a JSON-ready record.
+
+    wall_ms includes jax tracing + SPMD expansion (constant per case);
+    infer_ms is the relation-inference time the engine work targets.
+    """
+    repeats = repeats or REPEATS
+    run_case(case, degree=degree, quiet=True)      # warmup
+    walls, infers = [], []
+    cert = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        cert = run_case(case, degree=degree, quiet=True)
+        walls.append((time.perf_counter() - t0) * 1e3)
+        infers.append(cert.stats["time_s"] * 1e3)
+    return {
+        "wall_ms": round(statistics.median(walls), 3),
+        "infer_ms": round(statistics.median(infers), 3),
+        "egraph_nodes": cert.stats["egraph_nodes"],
+        "gs_ops": cert.stats["gs_ops"],
+        "gd_ops": cert.stats["gd_ops"],
+        "lemma_fires": sum(cert.stats["lemma_fires"].values()),
+        "phase_ms": {k: round(v * 1e3, 3)
+                     for k, v in cert.stats["phase_s"].items()},
+        "counters": cert.stats["counters"],
+    }
+
+
+def fig4_verification_time(rows, out, repeats=None):
     """Per-case end-to-end verification time (paper Fig. 4 analogue).
     The paper's models map onto these strategy cases: GPT/Megatron -> TP+SP,
     Qwen2/vLLM -> TP, Llama-3/Neuron -> TP, HF regression -> grad-accum."""
     run_case = _cases()
-    for case in ["tp_layer", "sp_pad", "ep_moe", "sp_moe", "ln_grad"]:
-        t0 = time.perf_counter()
-        cert = run_case(case, quiet=True)
-        dt = (time.perf_counter() - t0) * 1e6
-        rows.append((f"fig4/{case}", dt, cert.stats["egraph_nodes"]))
+    sec = out.setdefault("fig4", {})
+    for case in ["tp_layer", "sp_pad", "ep_moe", "sp_moe", "ln_grad",
+                 "sp_rope"]:
+        rec = _timed_case(run_case, case, repeats=repeats)
+        sec[case] = rec
+        rows.append((f"fig4/{case}", rec["wall_ms"] * 1e3,
+                     rec["egraph_nodes"]))
 
 
-def fig5_scaling(rows):
+def fig5_scaling(rows, out, repeats=None):
     """Verification time vs parallelism degree (2, 4, 8)."""
     run_case = _cases()
+    sec = out.setdefault("fig5", {})
     for deg in (2, 4, 8):
-        t0 = time.perf_counter()
-        cert = run_case("sp_moe", degree=deg, quiet=True)
-        dt = (time.perf_counter() - t0) * 1e6
-        rows.append((f"fig5/sp_moe_deg{deg}", dt, cert.stats["egraph_nodes"]))
+        rec = _timed_case(run_case, "sp_moe", degree=deg, repeats=repeats)
+        sec[f"sp_moe_deg{deg}"] = rec
+        rows.append((f"fig5/sp_moe_deg{deg}", rec["wall_ms"] * 1e3,
+                     rec["egraph_nodes"]))
     for deg in (2, 4):
-        t0 = time.perf_counter()
         try:
-            cert = run_case("tp_layer", degree=deg, quiet=True)
-            nodes = cert.stats["egraph_nodes"]
-        except Exception:   # completeness gap at this degree — record it
+            rec = _timed_case(run_case, "tp_layer", degree=deg,
+                              repeats=repeats)
+            nodes = rec["egraph_nodes"]
+        except Exception as e:   # completeness gap at this degree — record it
+            rec = {"error": type(e).__name__}
             nodes = -1
-        dt = (time.perf_counter() - t0) * 1e6
-        rows.append((f"fig5/tp_layer_deg{deg}", dt, nodes))
+        sec[f"tp_layer_deg{deg}"] = rec
+        rows.append((f"fig5/tp_layer_deg{deg}",
+                     rec.get("wall_ms", 0.0) * 1e3, nodes))
 
 
-def fig6_lemma_effort(rows):
+def ablation_engine(rows, out, repeats=None):
+    """sp_moe at degree 8: optimized engine vs the un-optimized baseline
+    (op-indexed dispatch, deferred rebuild, incremental extraction, indexed
+    frontier, cached node sets — all toggled together) on the same commit."""
+    from repro.core import capture, capture_spmd, check_refinement, expand_spmd
+    from repro.core.profile import CONFIG, set_optimizations
+    from repro.dist import strategies as S
+
+    saved_flags = CONFIG.as_dict()
+
+    repeats = max(repeats or REPEATS, 5)
+    seq_fn, dist_fn, axes, specs, avals, names = S.sp_moe_layer(degree=8)
+    gs = capture(seq_fn, avals, names)
+    cap = capture_spmd(dist_fn, axes, specs, avals, names)
+    gd, r_i = expand_spmd(cap)
+
+    def one(flag):
+        set_optimizations(flag)
+        cert = check_refinement(gs, gd, r_i)
+        return cert.stats["time_s"] * 1e3, cert
+
+    # interleave optimized/baseline runs and take the per-mode minimum so a
+    # noisy-neighbour CPU spike cannot land entirely on one mode
+    try:
+        one(True)
+        one(False)                                 # warmup both modes
+        opts, bases = [], []
+        for _ in range(repeats):
+            t, cert_on = one(True)
+            opts.append(t)
+            t, cert_off = one(False)
+            bases.append(t)
+    finally:
+        # restore whatever mode the process was launched in (GRAPHGUARD_OPT)
+        set_optimizations(True, **saved_flags)
+    opt_ms, base_ms = min(opts), min(bases)
+    assert cert_on.r_o == cert_off.r_o, \
+        "optimizations changed the certificate — behaviour not preserved!"
+    out["ablation"] = {
+        "case": "sp_moe_deg8",
+        "optimized_infer_ms": round(opt_ms, 3),
+        "baseline_infer_ms": round(base_ms, 3),
+        "optimized_infer_ms_median": round(statistics.median(opts), 3),
+        "baseline_infer_ms_median": round(statistics.median(bases), 3),
+        "speedup": round(base_ms / opt_ms, 2),
+        "certificates_identical": True,
+    }
+    rows.append(("ablation/sp_moe_deg8/optimized", opt_ms * 1e3,
+                 cert_on.stats["egraph_nodes"]))
+    rows.append(("ablation/sp_moe_deg8/baseline", base_ms * 1e3,
+                 cert_off.stats["egraph_nodes"]))
+    rows.append(("ablation/sp_moe_deg8/speedup_x100",
+                 0.0, int(100 * base_ms / opt_ms)))
+
+
+def fig6_lemma_effort(rows, out):
     """Lemma library size + complexity (paper Fig. 6: effort to add)."""
     from repro.core.lemmas import all_lemmas
     lemmas = all_lemmas()
     import inspect
+    sec = out.setdefault("fig6", {"loc": {}, "source": {}})
     total_loc = 0
     for lem in lemmas:
         loc = len(inspect.getsource(lem.fn).splitlines())
         total_loc += loc
+        sec["loc"][lem.name] = loc
         rows.append((f"fig6/loc/{lem.name}", 0.0, loc))
+    sec["n_lemmas"] = len(lemmas)
+    sec["avg_loc"] = total_loc // max(len(lemmas), 1)
     rows.append(("fig6/n_lemmas", 0.0, len(lemmas)))
-    rows.append(("fig6/avg_loc", 0.0, total_loc // max(len(lemmas), 1)))
+    rows.append(("fig6/avg_loc", 0.0, sec["avg_loc"]))
     by_src = {}
     for lem in lemmas:
         by_src[lem.source] = by_src.get(lem.source, 0) + 1
     for src, n in sorted(by_src.items()):
+        sec["source"][src] = n
         rows.append((f"fig6/source/{src}", 0.0, n))
 
 
-def fig7_lemma_heatmap(rows):
+def fig7_lemma_heatmap(rows, out):
     """Lemma fire counts per verification case (paper Fig. 7 heatmap)."""
     run_case = _cases()
+    sec = out.setdefault("fig7", {})
     for case in ["tp_layer", "ep_moe", "sp_moe", "ln_grad"]:
         cert = run_case(case, quiet=True)
+        sec[case] = dict(sorted(cert.stats["lemma_fires"].items()))
         for lemma, n in sorted(cert.stats["lemma_fires"].items()):
             rows.append((f"fig7/{case}/{lemma}", 0.0, n))
 
 
-def kernels_bench(rows):
+def kernels_bench(rows, out):
     """Pallas kernel wall time (interpret mode on CPU — correctness path)."""
     import jax.numpy as jnp
     import numpy as np
@@ -87,28 +195,61 @@ def kernels_bench(rows):
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
     s = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    sec = out.setdefault("kernels", {})
     t0 = time.perf_counter()
     rmsnorm(x, s, interpret=True).block_until_ready()
-    rows.append(("kernels/rmsnorm_interp", (time.perf_counter() - t0) * 1e6,
-                 x.size))
+    dt = (time.perf_counter() - t0) * 1e6
+    sec["rmsnorm_interp_us"] = round(dt, 1)
+    rows.append(("kernels/rmsnorm_interp", dt, x.size))
     t0 = time.perf_counter()
     ref.rmsnorm_ref(x, s).block_until_ready()
-    rows.append(("kernels/rmsnorm_ref", (time.perf_counter() - t0) * 1e6,
-                 x.size))
+    dt = (time.perf_counter() - t0) * 1e6
+    sec["rmsnorm_ref_us"] = round(dt, 1)
+    rows.append(("kernels/rmsnorm_ref", dt, x.size))
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single repeat, verification sections only")
+    ap.add_argument("--repeats", type=int, default=REPEATS)
+    ap.add_argument("--json", default=None,
+                    help="output path (default: BENCH_verify.json, or "
+                         "BENCH_verify_smoke.json under --smoke so smoke "
+                         "runs never clobber the tracked full artifact)")
+    args = ap.parse_args(argv)
+    repeats = 1 if args.smoke else args.repeats
+    if args.json is None:
+        args.json = "BENCH_verify_smoke.json" if args.smoke \
+            else "BENCH_verify.json"
+
     rows = []
-    for section in (fig4_verification_time, fig5_scaling, fig6_lemma_effort,
-                    fig7_lemma_heatmap, kernels_bench):
+    out = {"schema": 2, "repeats": repeats}
+    sections = [
+        lambda: fig4_verification_time(rows, out, repeats),
+        lambda: fig5_scaling(rows, out, repeats),
+    ]
+    if not args.smoke:
+        sections += [
+            lambda: ablation_engine(rows, out, repeats),
+            lambda: fig6_lemma_effort(rows, out),
+            lambda: fig7_lemma_heatmap(rows, out),
+            lambda: kernels_bench(rows, out),
+        ]
+    names = ["fig4_verification_time", "fig5_scaling", "ablation_engine",
+             "fig6_lemma_effort", "fig7_lemma_heatmap", "kernels_bench"]
+    for name, section in zip(names, sections):
         try:
-            section(rows)
+            section()
         except Exception as e:  # noqa: BLE001 — report per-section
-            rows.append((f"{section.__name__}/ERROR({type(e).__name__})",
-                         0.0, 0))
+            rows.append((f"{name}/ERROR({type(e).__name__})", 0.0, 0))
+            out.setdefault("errors", {})[name] = f"{type(e).__name__}: {e}"
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

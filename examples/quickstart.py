@@ -15,9 +15,10 @@ cert = run_case("tp_layer", degree=2)
 print("\n[1] TP layer verified — certificate maps the sequential output to",
       list(cert.r_o.values())[0], "\n")
 
-# 2. Paper bug 4: expert weights sharded under sequence parallelism — the
-#    diagonal blocks are never computed and GraphGuard localizes the op.
+# 2. Paper bug 4: a rotated expert-to-shard mapping — each rank applies its
+#    neighbour's expert weights and GraphGuard localizes the matmul.
 try:
-    run_case("sp_moe", bug="sharded_expert")
+    run_case("ep_moe", bug="sharded_expert")
+    print("[2] UNEXPECTED: bug not detected")
 except RefinementError as e:
     print("[2] injected bug detected:\n", e)

@@ -1,0 +1,11 @@
+#!/usr/bin/env sh
+# CI driver mirroring the Makefile targets: scripts/ci.sh [verify|quick|bench-smoke]
+set -eu
+cd "$(dirname "$0")/.."
+target="${1:-verify}"
+case "$target" in
+  verify)      PYTHONPATH=src python -m pytest -x -q ;;
+  quick)       PYTHONPATH=src python -m pytest -x -q -m "not slow" ;;
+  bench-smoke) python benchmarks/run.py --smoke ;;
+  *) echo "unknown target: $target (verify|quick|bench-smoke)" >&2; exit 2 ;;
+esac

@@ -11,6 +11,7 @@ from .capture import (Graph, CaptureError, capture, capture_spmd,
 from .egraph import EGraph, Lemma, EGraphLimit, EGraphShapeError
 from .infer import Certificate, GraphGuard, RefinementError, check_refinement
 from .lemmas import all_lemmas, register_lemma
+from .profile import CONFIG, OptConfig, Profile, set_optimizations
 from .symbolic import AffExpr, ScalarSolver, NonAffine
 from . import terms
 
@@ -19,5 +20,6 @@ __all__ = [
     "derive_input_relation", "EGraph", "Lemma", "EGraphLimit",
     "EGraphShapeError", "Certificate", "GraphGuard", "RefinementError",
     "check_refinement", "all_lemmas", "register_lemma", "AffExpr",
-    "ScalarSolver", "NonAffine", "terms",
+    "ScalarSolver", "NonAffine", "terms", "CONFIG", "OptConfig", "Profile",
+    "set_optimizations",
 ]

@@ -42,6 +42,43 @@ from jax.sharding import AbstractMesh, PartitionSpec
 from . import terms as T
 from .terms import Term
 
+# --- shard_map API compatibility (jax >= 0.6 vs 0.4.x) ---------------------
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax 0.4.x: experimental namespace, check_rep instead of check_vma
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _make_abstract_mesh(mesh_axes: dict) -> AbstractMesh:
+    axis_names = tuple(mesh_axes)
+    sizes = tuple(mesh_axes.values())
+    if hasattr(jax.sharding, "AxisType"):  # new-style constructor
+        return AbstractMesh(sizes, axis_names,
+                            axis_types=(jax.sharding.AxisType.Auto,)
+                            * len(axis_names))
+    return AbstractMesh(tuple(zip(axis_names, sizes)))
+
+
+def _wrap_shard_map(fn, mesh, in_specs):
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=PartitionSpec(), check_vma=False)
+    except TypeError:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=PartitionSpec(), check_rep=False)
+
+
+def _eqn_in_specs(eqn) -> list:
+    """Per-operand PartitionSpecs of a shard_map eqn, across jax versions
+    (new: ``in_specs`` param; 0.4.x: ``in_names`` dim->axes dicts)."""
+    if "in_specs" in eqn.params:
+        return list(eqn.params["in_specs"])
+    specs = []
+    for names in eqn.params["in_names"]:
+        nd = max(names) + 1 if names else 0
+        specs.append(PartitionSpec(*(names.get(d) for d in range(nd))))
+    return specs
+
 
 # ---------------------------------------------------------------------------
 # Graph IR
@@ -113,10 +150,8 @@ class SpmdCapture:
 def capture_spmd(fn: Callable, mesh_axes: dict, in_specs: Sequence,
                  avals: Sequence, names: Sequence[str]) -> SpmdCapture:
     axis_names = tuple(mesh_axes)
-    mesh = AbstractMesh(tuple(mesh_axes.values()), axis_names,
-                        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_axes))
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
-                       out_specs=PartitionSpec(), check_vma=False)
+    mesh = _make_abstract_mesh(mesh_axes)
+    sm = _wrap_shard_map(fn, mesh, tuple(in_specs))
     closed = jax.make_jaxpr(sm)(*avals)
     # unwrap the single shard_map eqn
     eqn = None
@@ -131,7 +166,7 @@ def capture_spmd(fn: Callable, mesh_axes: dict, in_specs: Sequence,
     # names/specs per eqn invar, and mark const positions.
     outer_pos = {v: i for i, v in enumerate(closed.jaxpr.invars)}
     const_map = dict(zip(closed.jaxpr.constvars, closed.consts))
-    eqn_specs = list(eqn.params["in_specs"])
+    eqn_specs = _eqn_in_specs(eqn)
     inner_names, const_positions = [], {}
     arg_names, arg_specs = [], []
     for pos, atom in enumerate(eqn.invars):
@@ -392,6 +427,8 @@ def _normalize(eqn, read) -> Optional[list]:
     p = eqn.params
     out_aval = eqn.outvars[0].aval if eqn.outvars else None
 
+    if prim == "device_put":  # layout/transfer no-op in a verification graph
+        return [read(a) for a in eqn.invars]
     if prim in _EW1_MAP:
         x = read(eqn.invars[0])
         mapped = _EW1_MAP[prim]
@@ -487,8 +524,7 @@ def _normalize(eqn, read) -> Optional[list]:
         starts = tuple(read(a) for a in eqn.invars[2:])
         if all(s.op == "lit" for s in starts):
             st = tuple(min(max(int(s.value), 0), d - z)
-                       for s, d, z in zip((int(s.value) for s in starts),
-                                          x.shape, u.shape))
+                       for s, d, z in zip(starts, x.shape, u.shape))
             return [T.dus(x, u, st)]
         return [Term("dyn_update_slice", (x, u) + starts, (), x.shape, x.dtype)]
     if prim == "pad":
@@ -642,8 +678,12 @@ def _norm_collective(eqn, read) -> list:
                      (("axes", axes), ("split", sa), ("concat", ca)),
                      tuple(ov.shape), x.dtype)]
     if prim == "ppermute":
+        ax = p["axis_name"]
+        if isinstance(ax, tuple):
+            assert len(ax) == 1, "multi-axis ppermute unsupported"
+            ax = ax[0]
         return [Term("ppermute", (x,),
-                     (("axis", p["axis_name"]), ("perm", tuple(map(tuple, p["perm"])))),
+                     (("axis", ax), ("perm", tuple(map(tuple, p["perm"])))),
                      x.shape, x.dtype)]
     raise AssertionError(prim)
 

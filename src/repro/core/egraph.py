@@ -17,12 +17,28 @@ Differences from egg, driven by GraphGuard's use (paper §4.2.2, §4.3.2):
   * "Pruning self-provable expressions" (§4.3.2) falls out of extraction: we
     always keep the *simplest* representative; the e-graph stores the rest
     compactly by sharing.
+
+Hot-path engineering (gated by ``repro.core.profile.CONFIG``):
+  * ``saturate`` dispatches lemmas through an op-indexed table built once per
+    lemma list, instead of scanning every lemma per pending node.
+  * Congruence repair (``rebuild``) runs once per saturation round (egg's
+    deferred-rebuild result) instead of after every pending node.
+  * Extraction is a worklist cost propagation with a per-class cost cache
+    keyed on the union version: re-extracting after no growth is a dict hit,
+    and after growth only classes whose costs could have changed recompute.
+  * ``nodes_of`` caches canonical node sets per class, invalidated by union
+    version plus targeted pops on node insertion.
+
+Extraction breaks cost ties with a deterministic term order (``Term.sort_key``)
+so certificates are bit-identical whether the optimizations are on or off.
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Callable, Iterable, Optional
+import time
+from collections import deque
+from typing import Callable, Optional
 
+from .profile import CONFIG
 from .terms import Term, CLEAN_OPS, tensor as mk_tensor
 
 
@@ -76,6 +92,22 @@ class EGraph:
         self.max_nodes = max_nodes
         self.n_nodes = 0
         self.version = 0  # bumped on every union; cheap fixpoint detection
+        self.profile = None  # optional repro.core.profile.Profile
+        # --- caches (see module docstring) -------------------------------
+        # class root -> ({op: [ENode]}, [ENode]); invalidated by targeted
+        # pops: a union pops the two merged roots and the losing side's
+        # parent classes (whose members' canonical forms changed), node
+        # insertion pops the owning class. Stale *children* inside cached
+        # nodes are harmless — all consumers resolve children via find().
+        self._nodes_cache: dict[int, tuple] = {}
+        # (id(leaf_ok), clean_only, max_cost, max_reach) ->
+        #   (version, best: {cid: (Term, cost)}, reach: frozenset, log_len)
+        self._extract_cache: dict[tuple, tuple] = {}
+        # append-only log of merge roots; extraction seeds recomputation
+        # from the suffix written since its cached snapshot
+        self._merge_log: list[int] = []
+        # (lemma list identity, {op: [Lemma]})
+        self._lemma_idx: Optional[tuple] = None
 
     # -- union-find ---------------------------------------------------------
     def find(self, a: int) -> int:
@@ -154,15 +186,28 @@ class EGraph:
         for n in ib.nodes:
             self.pending.append((n, a))
         self.version += 1
+        nc = self._nodes_cache
+        nc.pop(a, None)
+        nc.pop(b, None)
+        # members of b's old parent classes now canonicalize differently
+        for _pnode, pcid in ib.parents:
+            nc.pop(self.find(pcid), None)
+        self._merge_log.append(a)
         return a
 
     def rebuild(self):
         """Congruence closure repair (egg's rebuild)."""
+        if not self.worklist:
+            return
+        prof = self.profile
+        t0 = time.perf_counter() if prof is not None else 0.0
         while self.worklist:
             todo = {self.find(c) for c in self.worklist}
             self.worklist.clear()
             for cid in todo:
                 self._repair(cid)
+        if prof is not None:
+            prof.add_time("rebuild", time.perf_counter() - t0)
 
     def _repair(self, cid: int):
         info = self.classes.get(cid)
@@ -186,6 +231,7 @@ class EGraph:
             owner = self.classes.get(pcid)
             if owner is not None:
                 owner.nodes.add(canon)
+                self._nodes_cache.pop(pcid, None)
         info.parents = list(new_parents.items())
 
     # -- queries --------------------------------------------------------------
@@ -193,22 +239,51 @@ class EGraph:
         return self.classes[self.find(cid)]
 
     def nodes_of(self, cid: int, op: Optional[str] = None) -> list[ENode]:
-        info = self.info(cid)
-        canon = []
+        r = self.find(cid)
+        cached = CONFIG.cached_nodes
+        if cached:
+            ent = self._nodes_cache.get(r)
+            if ent is not None:
+                if op is None:
+                    return ent[1]
+                return ent[0].get(op, [])
+        info = self.classes[r]
+        canon: list[ENode] = []
+        by_op: dict[str, list[ENode]] = {}
         seen = set()
         for n in info.nodes:
             cn = n.canonical(self.find)
             if cn in seen:
                 continue
             seen.add(cn)
-            if op is None or cn.op == op:
-                canon.append(cn)
-        return canon
+            canon.append(cn)
+            by_op.setdefault(cn.op, []).append(cn)
+        if cached:
+            self._nodes_cache[r] = (by_op, canon)
+        if op is None:
+            return canon
+        return by_op.get(op, [])
 
     def class_of_tensor(self, name: str, shape, dtype="f") -> int:
         return self.add_term(mk_tensor(name, shape, dtype))
 
     # -- saturation -----------------------------------------------------------
+    def _lemma_index(self, lemmas: list) -> dict:
+        """Op -> applicable lemmas (original order), built once per list."""
+        if self._lemma_idx is not None and self._lemma_idx[0] is lemmas:
+            return self._lemma_idx[1]
+        ops = set()
+        for lem in lemmas:
+            if lem.ops is not None:
+                ops |= lem.ops
+        table = {op: [lem for lem in lemmas
+                      if lem.ops is None or op in lem.ops]
+                 for op in ops}
+        # ops with no op-specific lemma still get the wildcard lemmas
+        table[None] = [lem for lem in lemmas if lem.ops is None]
+        self._lemma_idx = (lemmas, table)
+        return table
+
     def saturate(self, lemmas: list, max_iters: int = 30,
                  fire_counts: Optional[dict] = None,
                  node_budget: int = 20000) -> None:
@@ -221,6 +296,10 @@ class EGraph:
         trade, like the paper's constrained lemmas; soundness unaffected).
         """
         start_nodes = self.n_nodes
+        prof = self.profile
+        indexed = CONFIG.indexed_dispatch
+        deferred = CONFIG.deferred_rebuild
+        table = self._lemma_index(lemmas) if indexed else None
         for _ in range(max_iters):
             if self.n_nodes - start_nodes > node_budget:
                 break
@@ -236,23 +315,35 @@ class EGraph:
                     continue
                 seen.add((node, cid))
                 uniq.append((node, cid))
-            batch = uniq
             before = self.version
             grew = False
-            for node, cid in batch:
+            for node, cid in uniq:
                 cid = self.find(cid)
-                if cid not in self.classes:
-                    cid = self.find(cid)
                 node = node.canonical(self.find)
-                for lem in lemmas:
-                    if lem.ops is not None and node.op not in lem.ops:
+                if indexed:
+                    cand = table.get(node.op)
+                    if cand is None:
+                        cand = table[None]
+                else:
+                    cand = lemmas
+                if prof is not None:
+                    prof.count("nodes_dispatched")
+                    prof.count("lemma_scan_len",
+                               len(cand) if indexed else len(lemmas))
+                for lem in cand:
+                    if not indexed and lem.ops is not None \
+                            and node.op not in lem.ops:
                         continue
                     try:
                         eqs = lem.fn(self, node, cid)
                     except EGraphLimit:
                         raise
+                    if prof is not None:
+                        prof.count("lemma_calls")
                     if not eqs:
                         continue
+                    if prof is not None:
+                        prof.count("lemma_hits")
                     if fire_counts is not None:
                         fire_counts[lem.name] = fire_counts.get(lem.name, 0) + len(eqs)
                     for lhs, rhs in eqs:
@@ -261,9 +352,13 @@ class EGraph:
                         if self.find(la) != self.find(ra):
                             self.merge(la, ra)
                             grew = True
-                self.rebuild()
+                if not deferred:
+                    self.rebuild()
                 if self.n_nodes - start_nodes > node_budget:
                     break
+            # batched congruence repair: once per round (egg's deferred
+            # rebuild) instead of once per pending node
+            self.rebuild()
             if not self.pending and not grew and self.version == before:
                 break
 
@@ -291,14 +386,121 @@ class EGraph:
         ent = costs.get(self.find(cid))
         return None if ent is None else ent[0]
 
+    @staticmethod
+    def _better(cand: tuple, cur: tuple) -> bool:
+        """Deterministic total order on (term, cost): cost first, then the
+        structural term key — ties must resolve identically regardless of
+        node iteration order so certificates don't depend on opt toggles."""
+        if cand[1] != cur[1]:
+            return cand[1] < cur[1]
+        if cand[0] is cur[0]:
+            return False
+        return cand[0].sort_key() < cur[0].sort_key()
+
     def _bellman(self, root, leaf_ok, clean_only, max_cost,
                  max_reach: int = 4000):
-        """Fixed-point cost propagation over the e-graph (handles cycles)."""
-        root = self.find(root)
-        # cost: (unclean_ops, nodes); clean_only treats unclean as infeasible
-        best: dict[int, tuple[Term, tuple[int, int]]] = {}
+        """Worklist cost propagation over the e-graph (handles cycles).
 
-        # restrict attention to classes reachable from root
+        cost = (unclean_ops, nodes); clean_only treats unclean as infeasible.
+        With ``CONFIG.incremental_extract`` the per-class results are cached
+        keyed on the union version: an unchanged graph returns the cached
+        table outright; after growth only classes whose membership changed
+        (plus newly reachable ones) are re-seeded, and improvements propagate
+        upward through in-reach parent edges. Costs are monotone under e-graph
+        growth (classes only gain representations), so stale entries are
+        valid upper bounds — never wrong answers.
+        """
+        root = self.find(root)
+        prof = self.profile
+        incremental = CONFIG.incremental_extract
+        if not incremental:
+            return self._bellman_sweep(root, leaf_ok, clean_only, max_cost,
+                                       max_reach)
+        # key on the predicate object itself (the dict keeps it alive) —
+        # an id() key would alias a GC-reused address to the wrong predicate
+        key = (leaf_ok, clean_only, max_cost, max_reach)
+        if prof is not None:
+            prof.count("extract_calls")
+        cached = self._extract_cache.get(key)
+        if cached is not None and cached[0] == self.version \
+                and root in cached[2]:
+            if prof is not None:
+                prof.count("extract_cache_hits")
+            return cached[1]
+
+        # restrict attention to classes reachable from root; upward
+        # propagation reuses the e-graph's maintained parent lists (a
+        # superset of in-reach edges, filtered by reach membership below)
+        reach, truncated = self._reach(root, max_reach)
+
+        best: dict[int, tuple[Term, tuple[int, int]]] = {}
+        if cached is not None:
+            cver, cbest, creach, clog = cached
+            # cached entries stay valid upper bounds; remap to current roots
+            for c, ent in cbest.items():
+                r = self.find(c)
+                if r not in reach:
+                    continue
+                cur = best.get(r)
+                if cur is None or self._better(ent, cur):
+                    best[r] = ent
+            creach_now = {self.find(c) for c in creach}
+            seed = {r for r in reach if r not in creach_now}
+            for c in self._merge_log[clog:]:
+                r = self.find(c)
+                if r in reach:
+                    seed.add(r)
+        else:
+            seed = set(reach)
+
+        wl = deque(seed)
+        inq = set(seed)
+        # A merge can make a *parent* newly feasible without improving the
+        # merged class's own best (e.g. an infeasible class folded into a
+        # feasible one: the winner's recompute shows no improvement, so the
+        # improvement cascade alone would never reach the parent). Seed
+        # classes therefore notify their in-reach parents unconditionally.
+        if cached is not None:
+            for c in tuple(seed):
+                info = self.classes.get(c)
+                if info is None:
+                    continue
+                for _pnode, pcid in info.parents:
+                    p = self.find(pcid)
+                    if p in reach and p not in inq:
+                        inq.add(p)
+                        wl.append(p)
+        while wl:
+            c = wl.popleft()
+            inq.discard(c)
+            info = self.classes.get(c)
+            if info is None:
+                continue
+            improved = False
+            for n in self.nodes_of(c):
+                cand = self._node_cost(n, best, leaf_ok, clean_only,
+                                       info, max_cost)
+                if cand is None:
+                    continue
+                cur = best.get(c)
+                if cur is None or self._better(cand, cur):
+                    best[c] = cand
+                    improved = True
+            if improved:
+                for _pnode, pcid in info.parents:
+                    p = self.find(pcid)
+                    if p in reach and p not in inq:
+                        inq.add(p)
+                        wl.append(p)
+        if not truncated:
+            # a max_reach-truncated table is root-specific (other roots'
+            # subtrees were never explored) — never serve it from cache
+            self._extract_cache[key] = (self.version, best, frozenset(reach),
+                                        len(self._merge_log))
+        return best
+
+    def _reach(self, root: int, max_reach: int) -> tuple[set, bool]:
+        """Classes reachable from ``root``; truncated=True if max_reach hit."""
         reach: set[int] = set()
         stack = [root]
         while stack:
@@ -307,11 +509,21 @@ class EGraph:
                 continue
             reach.add(c)
             if len(reach) > max_reach:
-                break
+                return reach, True
             for n in self.nodes_of(c):
                 for ch in n.children:
                     stack.append(self.find(ch))
+        return reach, False
 
+    def _bellman_sweep(self, root, leaf_ok, clean_only, max_cost,
+                       max_reach: int = 4000):
+        """Pre-optimization baseline: full fixed-point re-sweeps over the
+        reachable set (the seed engine's extraction). Kept behind
+        ``CONFIG.incremental_extract = False`` so benchmarks can measure the
+        worklist + cache variant against it on the same commit; uses the same
+        ``_better`` tie-break so both produce identical certificates."""
+        reach, _truncated = self._reach(root, max_reach)
+        best: dict[int, tuple[Term, tuple[int, int]]] = {}
         changed = True
         iters = 0
         while changed and iters < 30:
@@ -322,14 +534,13 @@ class EGraph:
                 if info is None:
                     continue
                 for n in self.nodes_of(c):
-                    t_cost = self._node_cost(n, best, leaf_ok, clean_only,
-                                             info, max_cost)
-                    if t_cost is None:
+                    cand = self._node_cost(n, best, leaf_ok, clean_only,
+                                           info, max_cost)
+                    if cand is None:
                         continue
-                    term, cost = t_cost
                     cur = best.get(c)
-                    if cur is None or cost < cur[1]:
-                        best[c] = (term, cost)
+                    if cur is None or self._better(cand, cur):
+                        best[c] = cand
                         changed = True
         return best
 

@@ -21,10 +21,18 @@ The result is a ``Certificate`` holding the complete clean output relation
 R_o; ``Certificate.reconstruct`` replays it numerically (certificates are
 executable — paper §3.1 'the user can use a complete R_o to translate
 outputs from a deployed G_d').
+
+Frontier growth (step 3) is indexed: each pending G_d def carries an
+unmet-dependency count, and a map from leaf tensor name to waiting defs
+lets a newly related tensor enqueue exactly the defs it unblocks —
+O(new names) per call instead of rescanning every pending def.
+``Certificate.stats`` carries per-phase wall time (saturate / rebuild /
+frontier / extract) and engine counters from ``repro.core.profile``.
 """
 from __future__ import annotations
 
 import time
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -33,6 +41,7 @@ import numpy as np
 from .capture import Graph
 from .egraph import EGraph, EGraphLimit
 from .lemmas import all_lemmas
+from .profile import CONFIG, Profile
 from .terms import Term, eval_term
 
 
@@ -98,11 +107,45 @@ class GraphGuard:
         self.eg = EGraph(max_nodes=self.max_nodes)
         self.lemmas = all_lemmas()
         self.fire_counts: dict = {}
+        self.profile = Profile()
+        self.eg.profile = self.profile
         self.related: set = set()          # T_rel: related G_d tensor names
         self.gd_pending = list(self.gd.defs)  # G_d defs not yet installed
         self.relation: dict = {}           # G_s tensor -> clean Term
+        # frontier index: per-def unmet-dependency counts + leaf -> waiters
+        self._unmet: dict = {}
+        self._waiters: dict = defaultdict(list)
+        self._ready: deque = deque()
+        self._installed: set = set()
+        if CONFIG.indexed_frontier:
+            self._init_frontier_index()
 
     # -- setup ---------------------------------------------------------------
+    def _init_frontier_index(self):
+        for entry in self.gd_pending:
+            name, term = entry
+            deps = {l.name for l in term.leaves()
+                    if l.op == "tensor" and l.name not in self.gd.consts
+                    and l.name not in self.related}
+            if not deps:
+                self._ready.append(entry)
+            else:
+                self._unmet[name] = len(deps)
+                for d in deps:
+                    self._waiters[d].append(entry)
+
+    def _mark_name(self, name: str):
+        """Add a G_d tensor to T_rel, unblocking defs that waited on it."""
+        if name in self.related:
+            return
+        self.related.add(name)
+        if not CONFIG.indexed_frontier:
+            return
+        for entry in self._waiters.pop(name, ()):
+            left = self._unmet[entry[0]] = self._unmet[entry[0]] - 1
+            if left == 0:
+                self._ready.append(entry)
+
     def _install_inputs(self):
         for name, exprs in self.r_i.items():
             c_s = self.eg.add_term(self.gs.tensor(name))
@@ -110,7 +153,7 @@ class GraphGuard:
                 self.eg.merge(c_s, self.eg.add_term(e))
                 for leaf in e.leaves():
                     if leaf.op == "tensor":
-                        self.related.add(leaf.name)
+                        self._mark_name(leaf.name)
             if exprs:
                 self.relation[name] = exprs[0]
         # consts: value-match G_s consts to G_d consts (rank-replicated)
@@ -121,35 +164,71 @@ class GraphGuard:
                 if sval.shape == dval.shape and sval.dtype == dval.dtype \
                         and np.array_equal(sval, dval):
                     self.eg.merge(c_s, self.eg.add_term(self.gd.tensor(dname)))
-                    self.related.add(dname)
+                    self._mark_name(dname)
                     matched += 1
         self.eg.rebuild()
 
     # -- frontier (Listing 3) -------------------------------------------------
+    def _install_def(self, name: str, term: Term):
+        c_out = self.eg.add_term(self.gd.tensor(name))
+        self.eg.merge(c_out, self.eg.add_term(term))
+        for l in term.leaves():
+            if l.op == "tensor":
+                self._mark_name(l.name)
+        self._mark_name(name)
+
     def _grow_frontier(self) -> bool:
         """Install defining equations of G_d nodes whose inputs are related."""
+        t0 = time.perf_counter()
+        if CONFIG.indexed_frontier:
+            grew = False
+            while self._ready:
+                name, term = self._ready.popleft()
+                if name in self._installed:
+                    continue
+                self._installed.add(name)
+                self._install_def(name, term)
+                grew = True
+        else:
+            grew = self._grow_frontier_scan()
+        self.profile.add_time("frontier", time.perf_counter() - t0)
+        if grew:
+            self.eg.rebuild()
+        return grew
+
+    def _grow_frontier_scan(self) -> bool:
+        """Baseline O(pending defs) rescan (CONFIG.indexed_frontier off)."""
         grew = False
         still = []
         for name, term in self.gd_pending:
             leaves = [l.name for l in term.leaves() if l.op == "tensor"]
             if all(l in self.related or l in self.gd.consts for l in leaves):
-                c_out = self.eg.add_term(self.gd.tensor(name))
-                self.eg.merge(c_out, self.eg.add_term(term))
-                for l in leaves:
-                    self.related.add(l)
-                self.related.add(name)
+                self._install_def(name, term)
                 grew = True
             else:
                 still.append((name, term))
         self.gd_pending = still
-        if grew:
-            self.eg.rebuild()
         return grew
 
     def _mark_related(self, expr: Term):
         for leaf in expr.leaves():
             if leaf.op == "tensor":
-                self.related.add(leaf.name)
+                self._mark_name(leaf.name)
+
+    # -- timed engine wrappers -------------------------------------------------
+    def _saturate(self):
+        t0 = time.perf_counter()
+        self.eg.saturate(
+            self.lemmas,
+            fire_counts=self.fire_counts if self.collect_lemma_stats else None)
+        # note: includes rebuild time, which the egraph also reports separately
+        self.profile.add_time("saturate", time.perf_counter() - t0)
+
+    def _extract(self, cid, leaf_ok):
+        t0 = time.perf_counter()
+        out = self.eg.extract_clean(self.eg.find(cid), leaf_ok)
+        self.profile.add_time("extract", time.perf_counter() - t0)
+        return out
 
     # -- main loop (Listing 1) --------------------------------------------------
     def run(self) -> Certificate:
@@ -168,13 +247,10 @@ class GraphGuard:
             ce = None
             for _ in range(6):
                 for _ in range(10):
-                    self.eg.saturate(
-                        self.lemmas,
-                        fire_counts=self.fire_counts
-                        if self.collect_lemma_stats else None)
+                    self._saturate()
                     if not self._grow_frontier():
                         break
-                ce = self.eg.extract_clean(self.eg.find(c_out), leaf_ok)
+                ce = self._extract(c_out, leaf_ok)
                 if ce is None:
                     break
                 before = len(self.related)
@@ -201,7 +277,7 @@ class GraphGuard:
             if o in self.gs.consts or o in self.r_i:
                 continue  # passthrough outputs
             c = self.eg.add_term(self.gs.tensor(o))
-            ce = self.eg.extract_clean(self.eg.find(c), out_ok)
+            ce = self._extract(c, out_ok)
             if ce is None:
                 diag = self.eg.extract_any(self.eg.find(c), out_ok)
                 raise RefinementError(
@@ -216,6 +292,9 @@ class GraphGuard:
             "gs_ops": len(self.gs.defs),
             "gd_ops": len(self.gd.defs),
             "lemma_fires": dict(self.fire_counts),
+            "phase_s": self.profile.phase_seconds(),
+            "counters": self.profile.counter_values(),
+            "opt": CONFIG.as_dict(),
         }
         return Certificate(r_o, dict(self.relation), stats)
 

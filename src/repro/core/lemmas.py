@@ -445,6 +445,47 @@ def _concat_merge(eg: EGraph, node: ENode, cid: int):
     return eqs
 
 
+def _concat_exchange(eg: EGraph, node: ENode, cid: int):
+    """Block-matrix concat transposition: concat_d(A, B, ...) where every
+    child decomposes as a concat on a common dim d2 != d with the *same*
+    piece sizes along d2 equals concat_d2 of the per-piece concat_d's:
+
+        concat_1(concat_0(A1, A2), concat_0(B1, B2))
+          = concat_0(concat_1(A1, B1), concat_1(A2, B2))
+
+    This is what connects per-rank outputs assembled along one axis with a
+    rank split along another (e.g. rotary halves concatenated on features
+    under a sequence-parallel rank split)."""
+    dim = dict(node.attrs)["dim"]
+    chs = node.children
+    if len(chs) > MAX_FANOUT:
+        return []
+    eqs = []
+    for d2, xs in concat_reps(eg, chs[0]):
+        if d2 == dim or len(xs) > MAX_FANOUT:
+            continue
+        sizes = [eg.info(x).shape[d2] for x in xs]
+        cols = [xs]
+        ok = True
+        for ch in chs[1:]:
+            match = None
+            for dd, ys in concat_reps(eg, ch):
+                if dd == d2 and len(ys) == len(xs) and \
+                        [eg.info(y).shape[d2] for y in ys] == sizes:
+                    match = ys
+                    break
+            if match is None:
+                ok = False
+                break
+            cols.append(match)
+        if not ok:
+            continue
+        rows = [concat([cls(eg, col[i]) for col in cols], dim)
+                for i in range(len(xs))]
+        eqs.append((cid, concat(rows, d2)))
+    return eqs
+
+
 def _slice_cover(eg: EGraph, node: ENode, cid: int):
     """CONSTRAINED lemma (paper §4.3.2): X = concat(X[0:a], X[a:b], ...) only
     when complementary slices already exist as e-nodes. Triggered on slice."""
@@ -850,6 +891,7 @@ LEMMAS: list[Lemma] = [
     Lemma("slice_of_slice", {"slice"}, _slice_of_slice, source="taso"),
     Lemma("slice_of_ew", {"slice"}, _slice_of_ew),
     Lemma("concat_merge", {"concat"}, _concat_merge, source="taso"),
+    Lemma("concat_exchange", {"concat"}, _concat_exchange, source="taso"),
     Lemma("slice_cover", {"slice"}, _slice_cover),
     Lemma("transpose_alg", {"transpose"}, _transpose_lemmas, source="taso"),
     Lemma("reshape_alg", {"reshape"}, _reshape_lemmas),

@@ -1,0 +1,93 @@
+"""Lightweight per-phase instrumentation + engine optimization toggles.
+
+The inference hot path (saturate / rebuild / frontier / extract) is timed with
+plain ``perf_counter`` accumulation — no context-manager overhead in the inner
+loops. ``Certificate.stats["phase_s"]`` surfaces the accumulated seconds and
+``stats["counters"]`` the dispatch/cache counters, so every benchmark run can
+attribute wall time to a phase.
+
+``OptConfig`` gates each of the engine optimizations independently so the
+benchmark harness can measure the un-optimized baseline on the same commit
+(``GRAPHGUARD_OPT=0 python benchmarks/run.py`` or
+``set_optimizations(False)``):
+
+  indexed_dispatch    op-indexed lemma table in ``EGraph.saturate`` instead of
+                      scanning every lemma per pending node
+  deferred_rebuild    congruence repair once per saturation round instead of
+                      after every pending node
+  incremental_extract worklist cost propagation + per-class cost cache keyed
+                      on ``EGraph.version`` (re-extraction after no growth is
+                      a dict lookup)
+  indexed_frontier    leaf-name -> pending-def index with unmet-dependency
+                      counts in ``GraphGuard._grow_frontier`` instead of
+                      rescanning all pending G_d defs
+  cached_nodes        canonical node sets of ``EGraph.nodes_of`` cached per
+                      class, invalidated by union version + targeted pops
+
+All toggles are behaviour-preserving: they change *when* work happens, never
+which equalities hold, so certificates are identical either way (covered by
+``tests/test_graphguard.py::test_optimizations_behaviour_preserving``).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, fields
+
+
+@dataclass
+class OptConfig:
+    indexed_dispatch: bool = True
+    deferred_rebuild: bool = True
+    incremental_extract: bool = True
+    indexed_frontier: bool = True
+    cached_nodes: bool = True
+
+    @classmethod
+    def from_env(cls) -> "OptConfig":
+        on = os.environ.get("GRAPHGUARD_OPT", "1").lower() \
+            not in ("0", "off", "false", "no")
+        return cls(**{f.name: on for f in fields(cls)})
+
+    def as_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+# Process-wide config (mutated in place so modules that imported CONFIG see
+# toggles applied later, e.g. by the benchmark ablation section).
+CONFIG = OptConfig.from_env()
+
+
+def set_optimizations(enabled: bool, **overrides) -> None:
+    """Toggle all engine optimizations (keyword args override per-flag)."""
+    for f in fields(OptConfig):
+        setattr(CONFIG, f.name, overrides.get(f.name, enabled))
+
+
+class Profile:
+    """Accumulating per-phase timers and counters (all costs are adds)."""
+
+    __slots__ = ("timers", "counters")
+
+    def __init__(self):
+        self.timers: dict[str, float] = {}
+        self.counters: dict[str, int] = {}
+
+    def add_time(self, phase: str, dt: float) -> None:
+        self.timers[phase] = self.timers.get(phase, 0.0) + dt
+
+    def count(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    def phase_seconds(self) -> dict:
+        return dict(self.timers)
+
+    def counter_values(self) -> dict:
+        out = dict(self.counters)
+        calls = out.get("lemma_calls", 0)
+        if calls:
+            out["lemma_hit_rate"] = round(out.get("lemma_hits", 0) / calls, 4)
+        probes = out.get("extract_calls", 0)
+        if probes:
+            out["extract_cache_hit_rate"] = round(
+                out.get("extract_cache_hits", 0) / probes, 4)
+        return out

@@ -65,7 +65,7 @@ class Term:
     """Immutable hash-consed symbolic expression node."""
 
     __slots__ = ("op", "args", "attrs", "shape", "dtype", "_hash",
-                 "_leaves", "_clean", "_size")
+                 "_leaves", "_clean", "_size", "_skey")
 
     def __new__(cls, op: str, args: tuple = (), attrs: tuple = (),
                 shape: tuple = (), dtype: str = "f"):
@@ -83,6 +83,7 @@ class Term:
         self._leaves = None
         self._clean = None
         self._size = None
+        self._skey = None
         _intern[key] = self
         return self
 
@@ -122,6 +123,16 @@ class Term:
             self._size = 0 if self.is_leaf else \
                 1 + sum(a.size() for a in self.args)
         return self._size
+
+    def sort_key(self):
+        """Deterministic structural key (DAG-memoized): tuples compare op
+        first, so mixed-op comparisons never reach heterogeneous attrs.
+        Extraction uses this to break cost ties independent of e-node
+        iteration order."""
+        if self._skey is None:
+            self._skey = (self.op, self.attrs,
+                          tuple(a.sort_key() for a in self.args))
+        return self._skey
 
     def leaves(self) -> list["Term"]:
         """Distinct leaf terms (DAG-memoized)."""

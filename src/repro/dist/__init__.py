@@ -1,0 +1,10 @@
+"""Distribution-strategy case suite for GraphGuard verification.
+
+``repro.dist.strategies`` holds the paper-§6 workload builders: each case
+pairs a sequential model fragment (G_s) with its shard_map distributed
+implementation (G_d) plus the mesh/spec metadata needed to derive R_i, and
+``BUG_CASES`` injects the six real-world bug classes of the §6.2 case study.
+"""
+from . import strategies
+
+__all__ = ["strategies"]

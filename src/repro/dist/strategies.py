@@ -1,0 +1,315 @@
+"""Distribution-strategy case suite (paper §6 workloads + §6.2 bug study).
+
+Each builder returns ``(seq_fn, dist_fn, mesh_axes, in_specs, avals, names)``:
+
+  seq_fn     the sequential model fragment G_s (plain jax function)
+  dist_fn    the per-rank SPMD implementation, traced under ``shard_map``
+             by ``capture_spmd`` (collectives allowed)
+  mesh_axes  {axis name: parallelism degree}
+  in_specs   ``PartitionSpec`` per input — ``derive_input_relation`` turns
+             these into R_i
+  avals      ``ShapeDtypeStruct`` per (global) input
+  names      logical input names
+
+``bug=<name>`` injects one of the six real-world bug classes (paper §6.2)
+into the distributed side; ``BUG_CASES`` maps each bug to its host case and
+whether detection surfaces as a ``RefinementError`` (True) or as an
+unexpected-but-clean certificate the user inspects (False — paper bug 5).
+
+Sizes are deliberately small: verification cost is driven by operator count
+and parallelism degree, not tensor extents (the engine is symbolic).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _aval(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# tp_layer — Megatron-style tensor-parallel MLP block
+# ---------------------------------------------------------------------------
+
+def tp_transformer_layer(degree: int = 2, bug=None, seq: int = 4,
+                         d_model: int = 8, d_ff: int = 8):
+    """Column-parallel W1, row-parallel W2, psum to assemble the output.
+    The canonical TP pattern (paper Fig. 2): the k-split matmul pairs with
+    the psum expansion to an add over the rank group."""
+    assert d_ff % degree == 0
+
+    def seq_fn(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    def dist_fn(x, w1, w2):
+        h = jnp.tanh(x @ w1)          # x replicated, w1 column shard
+        yp = h @ w2                   # w2 row shard -> partial sums
+        return jax.lax.psum(yp, "tp")
+
+    axes = {"tp": degree}
+    specs = [P(), P(None, "tp"), P("tp", None)]
+    avals = [_aval((seq, d_model)), _aval((d_model, d_ff)),
+             _aval((d_ff, d_model))]
+    return seq_fn, dist_fn, axes, specs, avals, ["x", "w1", "w2"]
+
+
+# ---------------------------------------------------------------------------
+# sp_rope — sequence-parallel rotary position embedding
+# ---------------------------------------------------------------------------
+
+def sp_rope_layer(degree: int = 2, bug=None, seq: int = 8, d_model: int = 8):
+    """Rotary embedding under a sequence shard: each rank must slice the
+    cos/sin tables at its *global* position offset (rank * chunk).
+    Bug `rope_offset`: every rank uses local positions (offset 0) — the
+    real-world vLLM/Neuron bug class from the paper's case study."""
+    assert seq % degree == 0 and d_model % 2 == 0
+    half = d_model // 2
+    pos = np.arange(seq, dtype=np.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (np.arange(half, dtype=np.float32) / half))
+    cos = np.cos(pos * inv).astype(np.float32)        # (S, half)
+    sin = np.sin(pos * inv).astype(np.float32)
+    chunk = seq // degree
+
+    def seq_fn(x):
+        x1, x2 = x[:, :half], x[:, half:]
+        y1 = x1 * cos - x2 * sin
+        y2 = x2 * cos + x1 * sin
+        return jnp.concatenate([y1, y2], axis=1)
+
+    def dist_fn(x):
+        if bug == "rope_offset":
+            start = 0                 # BUG: local positions on every rank
+        else:
+            start = jax.lax.axis_index("sp") * chunk
+        c = jax.lax.dynamic_slice(cos, (start, 0), (chunk, half))
+        s = jax.lax.dynamic_slice(sin, (start, 0), (chunk, half))
+        x1, x2 = x[:, :half], x[:, half:]
+        y1 = x1 * c - x2 * s
+        y2 = x2 * c + x1 * s
+        return jnp.concatenate([y1, y2], axis=1)
+
+    axes = {"sp": degree}
+    specs = [P("sp", None)]
+    return seq_fn, dist_fn, axes, specs, [_aval((seq, d_model))], ["x"]
+
+
+# ---------------------------------------------------------------------------
+# sp_pad — pad-to-block then slice-off under a sequence shard
+# ---------------------------------------------------------------------------
+
+def sp_pad_slice(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4,
+                 pad: int = 2):
+    """Each rank pads its shard to a kernel block size, computes, then
+    slices the padding back off. Bug `pad_slice`: the slice keeps the wrong
+    rows (drops real tokens, keeps padding) — the paper's pad/slice
+    mismatch class."""
+    assert seq % degree == 0
+    chunk = seq // degree
+
+    def seq_fn(x):
+        return jnp.tanh(x)
+
+    def dist_fn(x):
+        p = jnp.pad(x, ((0, pad), (0, 0)))
+        h = jnp.tanh(p)
+        if bug == "pad_slice":
+            return h[pad:pad + chunk]     # BUG: off-by-pad slice
+        return h[:chunk]
+
+    axes = {"sp": degree}
+    specs = [P("sp", None)]
+    return seq_fn, dist_fn, axes, specs, [_aval((seq, d_model))], ["x"]
+
+
+# ---------------------------------------------------------------------------
+# ep_moe — expert-parallel MoE with pre-routed tokens
+# ---------------------------------------------------------------------------
+
+def ep_moe_layer(degree: int = 2, bug=None, tokens: int = 4, d_model: int = 4):
+    """Expert e lives on rank e; tokens arrive pre-sorted by expert, so the
+    token shard on rank e is exactly expert e's batch. Bug `sharded_expert`:
+    the expert-to-shard mapping is rotated (each rank applies its
+    neighbour's expert weights via ppermute) — the paper's mis-sharded
+    expert weight class."""
+    n_exp = degree
+
+    def seq_fn(x, w):
+        outs = []
+        for e in range(n_exp):
+            xe = x[e * tokens:(e + 1) * tokens]
+            outs.append(xe @ w[e])
+        return jnp.concatenate(outs, axis=0)
+
+    def dist_fn(x, w):
+        we = w[0]                     # local expert shard (1, D, D) -> (D, D)
+        if bug == "sharded_expert":
+            we = jax.lax.ppermute(
+                we, "ep", [(i, (i + 1) % n_exp) for i in range(n_exp)])
+        return x @ we
+
+    axes = {"ep": degree}
+    specs = [P("ep", None), P("ep", None, None)]
+    avals = [_aval((n_exp * tokens, d_model)),
+             _aval((n_exp, d_model, d_model))]
+    return seq_fn, dist_fn, axes, specs, avals, ["x", "w"]
+
+
+# ---------------------------------------------------------------------------
+# aux_loss — auxiliary-loss normalization (documented completeness gap)
+# ---------------------------------------------------------------------------
+
+def aux_loss_scale(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
+    """Load-balancing-style scalar loss. The sequential side sums a
+    *flattened* view while the distributed side reduces both axes at once —
+    numerically identical, but relating a reduce-of-reshape to a multi-axis
+    reduce is outside the lemma fragment, so even the correct implementation
+    false-alarms (sound incompleteness, see EXPERIMENTS.md §Gaps).
+    Bug `aux_scale`: each rank averages by its *local* element count before
+    the psum, inflating the loss by the parallelism degree — the paper's
+    aux-loss mis-scaling class."""
+    assert seq % degree == 0
+    n = seq * d_model
+    local_n = (seq // degree) * d_model
+
+    def seq_fn(p):
+        return jnp.sum(p.reshape(-1)) / n
+
+    def dist_fn(p):
+        loc = jnp.sum(p)
+        if bug == "aux_scale":
+            return jax.lax.psum(loc / local_n, "ep")   # BUG: degree x too big
+        return jax.lax.psum(loc, "ep") / n
+
+    axes = {"ep": degree}
+    specs = [P("ep", None)]
+    return seq_fn, dist_fn, axes, specs, [_aval((seq, d_model))], ["p"]
+
+
+# ---------------------------------------------------------------------------
+# sp_moe — sequence-parallel gated FFN stack (the fig5 scaling case)
+# ---------------------------------------------------------------------------
+
+def sp_moe_layer(degree: int = 2, bug=None, seq: int = 16, d_model: int = 8,
+                 d_ff: int = 8):
+    """Four chained gated-FFN blocks under a sequence shard with replicated
+    weights. Pure row parallelism — no collectives — but every operator's
+    relation is a degree-wide concat, so e-graph size and lemma work scale
+    with the degree (paper Fig. 5's scaling axis), and the chained blocks
+    give the relation chains realistic depth."""
+    assert seq % degree == 0
+
+    def block(x, wg, w1, w2):
+        h = jnp.tanh(x @ w1)
+        g = jax.nn.sigmoid(x @ wg)
+        return (h * g) @ w2
+
+    def seq_fn(x, wg, w1, w2):
+        u = x
+        for _ in range(4):
+            u = block(u, wg, w1, w2)
+        return u
+
+    dist_fn = seq_fn                  # same per-rank program, sharded inputs
+
+    axes = {"sp": degree}
+    specs = [P("sp", None), P(), P(), P()]
+    avals = [_aval((seq, d_model)), _aval((d_model, d_ff)),
+             _aval((d_model, d_ff)), _aval((d_ff, d_model))]
+    return seq_fn, dist_fn, axes, specs, avals, ["x", "wg", "w1", "w2"]
+
+
+# ---------------------------------------------------------------------------
+# grad_accum — microbatch gradient accumulation (documented completeness gap)
+# ---------------------------------------------------------------------------
+
+def grad_accum_step(degree: int = 2, bug=None, batch: int = 8,
+                    d_model: int = 4):
+    """Data-parallel gradient step with per-rank microbatch accumulation
+    into a scatter buffer (dynamic_update_slice), then a psum and a global
+    normalization. The buffer-scatter accumulation is outside the clean
+    fragment (no dus-to-concat lemma yet), so even the correct version
+    false-alarms — documented gap, see EXPERIMENTS.md §Gaps.
+    Bug `grad_accum`: the final normalization divides by the per-rank
+    element count instead of the global batch — the HF-regression class
+    where accumulated gradients come out n_steps x too large."""
+    assert batch % (2 * degree) == 0
+    local = batch // degree
+    half = local // 2
+
+    def seq_fn(x):
+        return jnp.sum(x, axis=0) / batch
+
+    def dist_fn(x):
+        g1 = jnp.sum(x[:half], axis=0)
+        g2 = jnp.sum(x[half:], axis=0)
+        buf = jnp.zeros((2, x.shape[1]), x.dtype)
+        buf = jax.lax.dynamic_update_slice(buf, g1[None], (0, 0))
+        buf = jax.lax.dynamic_update_slice(buf, g2[None], (1, 0))
+        acc = jnp.sum(buf, axis=0)
+        tot = jax.lax.psum(acc, "dp")
+        denom = local if bug == "grad_accum" else batch   # BUG: missing 1/deg
+        return tot / denom
+
+    axes = {"dp": degree}
+    specs = [P("dp", None)]
+    return seq_fn, dist_fn, axes, specs, [_aval((batch, d_model))], ["x"]
+
+
+# ---------------------------------------------------------------------------
+# ln_grad — layer-norm weight gradient under sequence parallelism
+# ---------------------------------------------------------------------------
+
+def ln_weight_grad(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
+    """The weight-gradient reduction of a norm layer: sum over the (sharded)
+    sequence axis needs a cross-rank all-reduce. Bug `ln_no_allreduce`
+    (paper bug 5): the psum is skipped. No error is raised — the inferred
+    R_o is clean but *unexpected* (a cross-rank add instead of an identity
+    map), which is how the paper reports the user caught it."""
+    assert seq % degree == 0
+
+    def seq_fn(dy, xhat):
+        return jnp.sum(dy * xhat, axis=0)
+
+    def dist_fn(dy, xhat):
+        loc = jnp.sum(dy * xhat, axis=0)
+        if bug == "ln_no_allreduce":
+            return loc                # BUG: per-rank partial, no all-reduce
+        return jax.lax.psum(loc, "sp")
+
+    axes = {"sp": degree}
+    specs = [P("sp", None), P("sp", None)]
+    avals = [_aval((seq, d_model)), _aval((seq, d_model))]
+    return seq_fn, dist_fn, axes, specs, avals, ["dy", "xhat"]
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+STRATEGY_CASES = {
+    "tp_layer": tp_transformer_layer,
+    "sp_rope": sp_rope_layer,
+    "sp_pad": sp_pad_slice,
+    "ep_moe": ep_moe_layer,
+    "aux_loss": aux_loss_scale,
+    "sp_moe": sp_moe_layer,
+    "grad_accum": grad_accum_step,
+    "ln_grad": ln_weight_grad,
+}
+
+# bug name -> (host case builder, detection raises RefinementError?)
+# False = paper bug 5 style: certificate is produced but its relation is not
+# the one the user expects (inspected, not raised).
+BUG_CASES = {
+    "rope_offset": (sp_rope_layer, True),
+    "aux_scale": (aux_loss_scale, True),
+    "pad_slice": (sp_pad_slice, True),
+    "sharded_expert": (ep_moe_layer, True),
+    "grad_accum": (grad_accum_step, True),
+    "ln_no_allreduce": (ln_weight_grad, False),
+}

@@ -27,15 +27,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
                   scale: float):
     _, bq, hd = q_ref.shape
     Sk = k_ref.shape[1]
-    q = q_ref[0].astype(jnp.float32) * scale
+    # size-1 leading slices (not int indices): int ref-indices break the
+    # interpret-mode discharge rule on older jax (0.4.x)
+    q = pl.load(q_ref, (pl.dslice(0, 1), slice(None), slice(None)))[0] \
+        .astype(jnp.float32) * scale
     iq = pl.program_id(1)
 
     def body(ik, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.dslice(ik * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(ik * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(ik * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(ik * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                      # (bq, bk)
         if causal:
             qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
@@ -57,7 +60,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
     else:
         n_k = Sk // block_k
     acc, m, l = jax.lax.fori_loop(0, n_k, body, (acc0, m0, l0))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    out = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    pl.store(o_ref, (pl.dslice(0, 1), slice(None), slice(None)), out[None])
 
 
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,

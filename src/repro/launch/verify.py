@@ -31,6 +31,13 @@ CASES = {
 def run_case(case: str, bug=None, degree: int = 2, max_nodes=400_000,
              quiet=False):
     builder = CASES[case]
+    if bug is not None:
+        host = S.BUG_CASES[bug][0]
+        if host is not builder:
+            hosts = [k for k, b in CASES.items() if b is host]
+            raise ValueError(
+                f"bug `{bug}` belongs to case {hosts or '?'} — running it "
+                f"under `{case}` would silently verify the clean graph")
     seq_fn, dist_fn, mesh_axes, in_specs, avals, names = builder(
         degree=degree, bug=bug)
     gs = capture(seq_fn, avals, names)

@@ -11,6 +11,10 @@ from repro.models.config import InputShape
 from repro.train.loop import TrainConfig, make_train_step, make_loss_fn
 from repro.optim import adamw
 
+# heavy: one forward + one train step per architecture; excluded from the
+# quick gate via `-m "not slow"` (see Makefile `quick` target)
+pytestmark = pytest.mark.slow
+
 ARCHS = registry.ARCH_IDS + ["gpt"]
 
 

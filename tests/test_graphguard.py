@@ -5,12 +5,17 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests are skipped when hypothesis is absent (dev-only dep)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    given = settings = st = None
 
 from repro.core import (capture, capture_spmd, check_refinement, expand_spmd,
                         RefinementError)
 from repro.core.egraph import EGraph
 from repro.core.lemmas import all_lemmas
+from repro.core.profile import CONFIG, set_optimizations
 from repro.core import terms as T
 from repro.core.terms import eval_term
 from repro.core.symbolic import AffExpr, ScalarSolver
@@ -140,44 +145,136 @@ def test_paper_running_example():
     assert ce.op == "add"
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(2, 6), st.integers(2, 6), st.integers(1, 3),
-       st.integers(0, 10**6))
-def test_matmul_block_lemma_sound(m, k, n, seed):
-    """Property: the block-matmul rewrite preserves numeric value."""
-    rng = np.random.default_rng(seed)
-    a = rng.normal(size=(m, 2 * k)).astype(np.float32)
-    b = rng.normal(size=(2 * k, n)).astype(np.float32)
-    lhs = T.matmul(T.tensor("a", a.shape), T.tensor("b", b.shape))
-    rhs = T.add(
-        T.matmul(T.slice_(T.tensor("a", a.shape), (0, 0), (m, k)),
-                 T.slice_(T.tensor("b", b.shape), (0, 0), (k, n))),
-        T.matmul(T.slice_(T.tensor("a", a.shape), (0, k), (m, 2 * k)),
-                 T.slice_(T.tensor("b", b.shape), (k, 0), (2 * k, n))))
-    env = {"a": a, "b": b}
-    np.testing.assert_allclose(eval_term(lhs, env), eval_term(rhs, env),
-                               rtol=1e-4, atol=1e-4)
-
-
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.integers(-50, 50), min_size=1, max_size=5),
-       st.integers(1, 4), st.integers(0, 10**6))
-def test_egraph_merge_find_invariants(vals, nmerge, seed):
-    """Property: union-find stays canonical under arbitrary merges."""
+def test_saturate_after_interleaved_merges():
+    """Regression for the saturation-loop cleanup: interleaving merges with
+    saturation rounds must keep class ids canonical and still reach the
+    rewrite fixpoint (the old loop re-canonicalized ids twice; the batch
+    dedupe now does it once)."""
     eg = EGraph()
-    cids = [eg.add_term(T.tensor(f"x{i}", (abs(v) % 4 + 1,)))
-            for i, v in enumerate(vals)]
-    rng = np.random.default_rng(seed)
-    for _ in range(nmerge):
-        i, j = rng.integers(0, len(cids), 2)
-        a, b = cids[i], cids[j]
-        if eg.info(a).shape == eg.info(b).shape:
-            eg.merge(a, b)
+    x1 = T.tensor("x1@d", (2, 3)); x2 = T.tensor("x2@d", (2, 3))
+    cX = eg.add_term(T.tensor("X", (4, 3)))
+    eg.merge(cX, eg.add_term(T.concat([x1, x2], 0)))
+    eg.saturate(all_lemmas())
+    # now merge in a second representation mid-flight and saturate again
+    cY = eg.add_term(T.ew1("tanh", T.tensor("X", (4, 3))))
+    eg.merge(eg.add_term(T.tensor("Y", (4, 3))), cY)
     eg.rebuild()
-    for c in cids:
+    eg.saturate(all_lemmas())
+    ce = eg.extract_clean(cY, lambda n: n.endswith("@d"))
+    assert ce is None  # tanh is not clean — but pieces must exist:
+    got = eg.extract_any(cY, lambda n: n.endswith("@d"))
+    assert got is not None
+    for c in (cX, cY):
         r = eg.find(c)
-        assert eg.find(r) == r
-        assert r in eg.classes
+        assert eg.find(r) == r and r in eg.classes
+
+
+def test_incremental_extraction_after_feasibility_merge():
+    """Regression: a merge that folds an infeasible class into a feasible
+    one must re-seed the *parents* of the merged class — the winner's own
+    best does not improve, so the improvement cascade alone never reaches
+    them and the cached extraction would stay infeasible."""
+    eg = EGraph()
+    x = T.tensor("x", (2,))
+    a = T.tensor("a@d", (2,))
+    cQ = eg.add_term(T.concat([x, a], 0))
+    leaf_ok = lambda n: n.endswith("@d")
+    assert eg.extract_clean(cQ, leaf_ok) is None   # x is not a @d leaf
+    eg.merge(eg.add_term(x), eg.add_term(a))       # now x == a@d
+    eg.rebuild()
+    ce = eg.extract_clean(cQ, leaf_ok)             # cached, incremental
+    assert ce is not None and ce.is_clean()
+    try:
+        set_optimizations(False)
+        sweep = eg.extract_clean(cQ, leaf_ok)
+    finally:
+        set_optimizations(True)
+    assert ce == sweep
+
+
+def test_certificate_stats_phases():
+    """Certificate.stats carries per-phase timings and engine counters."""
+    cert = _run("tp_layer")
+    for phase in ("saturate", "frontier", "extract"):
+        assert phase in cert.stats["phase_s"], cert.stats["phase_s"]
+        assert cert.stats["phase_s"][phase] >= 0.0
+    assert cert.stats["counters"].get("lemma_calls", 0) > 0
+    assert "opt" in cert.stats and "lemma_fires" in cert.stats
+
+
+def test_optimizations_behaviour_preserving():
+    """Dispatch/rebuild/extraction optimizations must not change results:
+    identical certificates on a clean case, same localized operator on a
+    bug case."""
+    try:
+        set_optimizations(True)
+        cert_on = _run("sp_moe", degree=4)
+        set_optimizations(False)
+        cert_off = _run("sp_moe", degree=4)
+        assert cert_on.r_o == cert_off.r_o
+        assert cert_on.relation == cert_off.relation
+
+        builder, _ = S.BUG_CASES["pad_slice"]
+        seq_fn, dist_fn, axes, specs, avals, names = builder(
+            degree=2, bug="pad_slice")
+        gs = capture(seq_fn, avals, names)
+        cap = capture_spmd(dist_fn, axes, specs, avals, names)
+        gd, r_i = expand_spmd(cap)
+        errs = []
+        for flag in (True, False):
+            set_optimizations(flag)
+            with pytest.raises(RefinementError) as exc:
+                check_refinement(gs, gd, r_i)
+            errs.append((exc.value.op_index, exc.value.op_name,
+                         exc.value.out_name))
+        assert errs[0] == errs[1]
+    finally:
+        set_optimizations(True)
+
+
+if st is not None:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 6), st.integers(2, 6), st.integers(1, 3),
+           st.integers(0, 10**6))
+    def test_matmul_block_lemma_sound(m, k, n, seed):
+        """Property: the block-matmul rewrite preserves numeric value."""
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(m, 2 * k)).astype(np.float32)
+        b = rng.normal(size=(2 * k, n)).astype(np.float32)
+        lhs = T.matmul(T.tensor("a", a.shape), T.tensor("b", b.shape))
+        rhs = T.add(
+            T.matmul(T.slice_(T.tensor("a", a.shape), (0, 0), (m, k)),
+                     T.slice_(T.tensor("b", b.shape), (0, 0), (k, n))),
+            T.matmul(T.slice_(T.tensor("a", a.shape), (0, k), (m, 2 * k)),
+                     T.slice_(T.tensor("b", b.shape), (k, 0), (2 * k, n))))
+        env = {"a": a, "b": b}
+        np.testing.assert_allclose(eval_term(lhs, env), eval_term(rhs, env),
+                                   rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(-50, 50), min_size=1, max_size=5),
+           st.integers(1, 4), st.integers(0, 10**6))
+    def test_egraph_merge_find_invariants(vals, nmerge, seed):
+        """Property: union-find stays canonical under arbitrary merges."""
+        eg = EGraph()
+        cids = [eg.add_term(T.tensor(f"x{i}", (abs(v) % 4 + 1,)))
+                for i, v in enumerate(vals)]
+        rng = np.random.default_rng(seed)
+        for _ in range(nmerge):
+            i, j = rng.integers(0, len(cids), 2)
+            a, b = cids[i], cids[j]
+            if eg.info(a).shape == eg.info(b).shape:
+                eg.merge(a, b)
+        eg.rebuild()
+        for c in cids:
+            r = eg.find(c)
+            assert eg.find(r) == r
+            assert r in eg.classes
+else:  # pragma: no cover — visible skip so the gap is not silent
+    @pytest.mark.skip(reason="hypothesis not installed (see "
+                             "requirements-dev.txt)")
+    def test_property_suite_requires_hypothesis():
+        pass
 
 
 def test_affine_solver():
