@@ -3,7 +3,7 @@
 PY ?= python
 PYTEST ?= $(PY) -m pytest
 
-.PHONY: verify quick bench-smoke bench bug-suite
+.PHONY: verify quick bench-smoke bench bug-suite suite
 
 # tier-1 gate: full test suite
 verify:
@@ -24,3 +24,9 @@ bench:
 # reproduce the paper §6.2 six-bug case study
 bug-suite:
 	PYTHONPATH=src $(PY) examples/verify_bug_suite.py
+
+# full clean-case matrix at degree 2 via the parallel suite runner, diffed
+# against the checked-in golden so a silently-broken strategy fails CI
+suite:
+	PYTHONPATH=src $(PY) -m repro.api --degrees 2 --workers 4 \
+		--check tests/golden/suite_degree2.json

@@ -2,6 +2,8 @@
 
   fig4      end-to-end verification time per model/strategy   (paper Fig. 4)
   fig5      scaling vs parallelism degree                     (paper Fig. 5)
+  suite     repro.api.Suite process-pool runner vs sequential
+            run_case looping on the clean degree-2 matrix
   ablation  sp_moe deg 8: optimized engine vs the same commit
             with dispatch/extraction optimizations disabled
   fig6      lemma-library effort: count + complexity          (paper Fig. 6)
@@ -28,35 +30,46 @@ REPEATS = 3
 
 
 def _cases():
-    from repro.launch.verify import run_case
-    return run_case
+    from repro.api import verify
+    return verify
 
 
-def _timed_case(run_case, case, degree=2, repeats=None):
+def _timed_case(verify, case, degree=2, repeats=None):
     """Warmup once, then median-of-N: returns a JSON-ready record.
 
     wall_ms includes jax tracing + SPMD expansion (constant per case);
     infer_ms is the relation-inference time the engine work targets.
+    Raises if the verdict misses the registry expectation, so a silently
+    broken strategy fails the section instead of timing garbage.
     """
     repeats = repeats or REPEATS
-    run_case(case, degree=degree, quiet=True)      # warmup
+
+    def checked(r):
+        assert r.verdict == "certificate", \
+            f"{case}@deg{degree}: verdict {r.verdict} " \
+            f"(expected {r.expected}) — " \
+            f"{r.error or (r.localization or {}).get('op_name')}"
+        return r
+
+    checked(verify(case, degree=degree))           # warmup
     walls, infers = [], []
-    cert = None
+    report = None
     for _ in range(repeats):
         t0 = time.perf_counter()
-        cert = run_case(case, degree=degree, quiet=True)
+        report = checked(verify(case, degree=degree))
         walls.append((time.perf_counter() - t0) * 1e3)
-        infers.append(cert.stats["time_s"] * 1e3)
+        infers.append(report.stats["time_s"] * 1e3)
+    stats = report.stats
     return {
         "wall_ms": round(statistics.median(walls), 3),
         "infer_ms": round(statistics.median(infers), 3),
-        "egraph_nodes": cert.stats["egraph_nodes"],
-        "gs_ops": cert.stats["gs_ops"],
-        "gd_ops": cert.stats["gd_ops"],
-        "lemma_fires": sum(cert.stats["lemma_fires"].values()),
+        "egraph_nodes": stats["egraph_nodes"],
+        "gs_ops": stats["gs_ops"],
+        "gd_ops": stats["gd_ops"],
+        "lemma_fires": sum(stats["lemma_fires"].values()),
         "phase_ms": {k: round(v * 1e3, 3)
-                     for k, v in cert.stats["phase_s"].items()},
-        "counters": cert.stats["counters"],
+                     for k, v in stats["phase_s"].items()},
+        "counters": stats["counters"],
     }
 
 
@@ -64,11 +77,11 @@ def fig4_verification_time(rows, out, repeats=None):
     """Per-case end-to-end verification time (paper Fig. 4 analogue).
     The paper's models map onto these strategy cases: GPT/Megatron -> TP+SP,
     Qwen2/vLLM -> TP, Llama-3/Neuron -> TP, HF regression -> grad-accum."""
-    run_case = _cases()
+    verify = _cases()
     sec = out.setdefault("fig4", {})
     for case in ["tp_layer", "sp_pad", "ep_moe", "sp_moe", "ln_grad",
                  "sp_rope"]:
-        rec = _timed_case(run_case, case, repeats=repeats)
+        rec = _timed_case(verify, case, repeats=repeats)
         sec[case] = rec
         rows.append((f"fig4/{case}", rec["wall_ms"] * 1e3,
                      rec["egraph_nodes"]))
@@ -76,16 +89,16 @@ def fig4_verification_time(rows, out, repeats=None):
 
 def fig5_scaling(rows, out, repeats=None):
     """Verification time vs parallelism degree (2, 4, 8)."""
-    run_case = _cases()
+    verify = _cases()
     sec = out.setdefault("fig5", {})
     for deg in (2, 4, 8):
-        rec = _timed_case(run_case, "sp_moe", degree=deg, repeats=repeats)
+        rec = _timed_case(verify, "sp_moe", degree=deg, repeats=repeats)
         sec[f"sp_moe_deg{deg}"] = rec
         rows.append((f"fig5/sp_moe_deg{deg}", rec["wall_ms"] * 1e3,
                      rec["egraph_nodes"]))
     for deg in (2, 4):
         try:
-            rec = _timed_case(run_case, "tp_layer", degree=deg,
+            rec = _timed_case(verify, "tp_layer", degree=deg,
                               repeats=repeats)
             nodes = rec["egraph_nodes"]
         except Exception as e:   # completeness gap at this degree — record it
@@ -94,6 +107,55 @@ def fig5_scaling(rows, out, repeats=None):
         sec[f"tp_layer_deg{deg}"] = rec
         rows.append((f"fig5/tp_layer_deg{deg}",
                      rec.get("wall_ms", 0.0) * 1e3, nodes))
+
+
+def suite_runner(rows, out, repeats=None):
+    """Suite process-pool runner vs sequential run_case looping.
+
+    Both modes sweep the clean degree-2 matrix (every registered case,
+    bug=None).  Sequential = ``Suite.run(workers=0)``, i.e. exactly the
+    in-process run_case loop the CLI used to do; parallel = 4 pool
+    workers with the warmed, persistent pool (steady state — the first
+    parallel sweep, which additionally pays pool spin-up + per-worker
+    jax backend init, is reported as ``first_parallel_run_ms``).
+    Median + min of N interleaved-ish repeats; the
+    section asserts the two modes' stable summaries (verdicts + R_o
+    certificates) are identical before reporting any numbers.
+    """
+    from repro.api import Suite
+
+    # the container CPU is very noisy and each sweep is ~100 ms, so take
+    # the min over a larger interleaved sample than the other sections
+    repeats = max(repeats or REPEATS, 9)
+    with Suite(degrees=(2,)) as suite:
+        n_tasks = len(suite.tasks())
+        res_seq = suite.run(workers=0)             # warmup sequential
+        t0 = time.perf_counter()
+        res_par = suite.run(workers=4)             # pool + backend init
+        first_par_s = time.perf_counter() - t0
+        assert res_seq.stable_summary() == res_par.stable_summary(), \
+            "suite results differ between sequential and pool execution"
+        seqs, pars = [], []
+        for _ in range(repeats):
+            seqs.append(suite.run(workers=0).wall_s)
+            pars.append(suite.run(workers=4).wall_s)
+    seq_ms = min(seqs) * 1e3
+    par_ms = min(pars) * 1e3
+    out["suite"] = {
+        "tasks": n_tasks,
+        "workers": 4,
+        "sequential_ms": round(seq_ms, 3),
+        "workers4_ms": round(par_ms, 3),
+        "sequential_ms_median": round(statistics.median(seqs) * 1e3, 3),
+        "workers4_ms_median": round(statistics.median(pars) * 1e3, 3),
+        "first_parallel_run_ms": round(first_par_s * 1e3, 3),
+        "speedup": round(seq_ms / par_ms, 2),
+        "results_identical": True,
+    }
+    rows.append(("suite/clean_deg2/sequential", seq_ms * 1e3, n_tasks))
+    rows.append(("suite/clean_deg2/workers4", par_ms * 1e3, n_tasks))
+    rows.append(("suite/clean_deg2/speedup_x100", 0.0,
+                 int(100 * seq_ms / par_ms)))
 
 
 def ablation_engine(rows, out, repeats=None):
@@ -177,12 +239,12 @@ def fig6_lemma_effort(rows, out):
 
 def fig7_lemma_heatmap(rows, out):
     """Lemma fire counts per verification case (paper Fig. 7 heatmap)."""
-    run_case = _cases()
+    verify = _cases()
     sec = out.setdefault("fig7", {})
     for case in ["tp_layer", "ep_moe", "sp_moe", "ln_grad"]:
-        cert = run_case(case, quiet=True)
-        sec[case] = dict(sorted(cert.stats["lemma_fires"].items()))
-        for lemma, n in sorted(cert.stats["lemma_fires"].items()):
+        report = verify(case)
+        sec[case] = dict(sorted(report.stats["lemma_fires"].items()))
+        for lemma, n in sorted(report.stats["lemma_fires"].items()):
             rows.append((f"fig7/{case}/{lemma}", 0.0, n))
 
 
@@ -229,15 +291,17 @@ def main(argv=None) -> None:
         lambda: fig4_verification_time(rows, out, repeats),
         lambda: fig5_scaling(rows, out, repeats),
     ]
+    names = ["fig4_verification_time", "fig5_scaling"]
     if not args.smoke:
         sections += [
+            lambda: suite_runner(rows, out, repeats),
             lambda: ablation_engine(rows, out, repeats),
             lambda: fig6_lemma_effort(rows, out),
             lambda: fig7_lemma_heatmap(rows, out),
             lambda: kernels_bench(rows, out),
         ]
-    names = ["fig4_verification_time", "fig5_scaling", "ablation_engine",
-             "fig6_lemma_effort", "fig7_lemma_heatmap", "kernels_bench"]
+        names += ["suite_runner", "ablation_engine", "fig6_lemma_effort",
+                  "fig7_lemma_heatmap", "kernels_bench"]
     for name, section in zip(names, sections):
         try:
             section()

@@ -1,24 +1,29 @@
 """Quickstart: verify a tensor-parallel transformer layer with GraphGuard,
-then catch an injected distribution bug.
+then catch an injected distribution bug — via the typed ``repro.api``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
 sys.path.insert(0, "src")
 
-from repro.core import RefinementError
-from repro.launch.verify import run_case
+from repro.api import verify
 
 # 1. A correct Megatron-style TP transformer layer: refinement holds and we
-#    get an executable certificate R_o.
-cert = run_case("tp_layer", degree=2)
+#    get an executable certificate R_o (report.certificate is the live
+#    object; report.r_o the stringified relation).
+report = verify("tp_layer", degree=2)
+assert report.verdict == "certificate" and report.ok
 print("\n[1] TP layer verified — certificate maps the sequential output to",
-      list(cert.r_o.values())[0], "\n")
+      list(report.r_o.values())[0], "\n")
 
 # 2. Paper bug 4: a rotated expert-to-shard mapping — each rank applies its
 #    neighbour's expert weights and GraphGuard localizes the matmul.
-try:
-    run_case("ep_moe", bug="sharded_expert")
+report = verify("ep_moe", bug="sharded_expert")
+if report.verdict == "refinement_error":
+    loc = report.localization
+    print("[2] injected bug detected at G_s operator "
+          f"#{loc['op_index']} `{loc['op_name']}` (output `{loc['out_name']}`)")
+    print("    nearest candidate:", loc.get("diagnostic", {}).get("expr"))
+else:
     print("[2] UNEXPECTED: bug not detected")
-except RefinementError as e:
-    print("[2] injected bug detected:\n", e)
+    sys.exit(1)

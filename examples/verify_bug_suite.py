@@ -1,24 +1,31 @@
-"""Reproduce the paper's §6.2 case study: all six real-world bug classes.
+"""Reproduce the paper's §6.2 case study: all six real-world bug classes,
+driven through the ``repro.api`` suite runner.
 
     PYTHONPATH=src python examples/verify_bug_suite.py
 """
 import sys
 sys.path.insert(0, "src")
 
-from repro.core import (capture, capture_spmd, check_refinement,
-                        expand_spmd, RefinementError)
-from repro.dist.strategies import BUG_CASES
+from repro.api import Suite, list_bugs
 
-for bug, (builder, raises) in BUG_CASES.items():
-    seq_fn, dist_fn, axes, specs, avals, names = builder(degree=2, bug=bug)
-    gs = capture(seq_fn, avals, names)
-    cap = capture_spmd(dist_fn, axes, specs, avals, names)
-    gd, r_i = expand_spmd(cap)
-    try:
-        cert = check_refinement(gs, gd, r_i)
-        status = ("detected via unexpected R_o: "
-                  + str(list(cert.r_o.values())[0])) if not raises \
-            else "NOT DETECTED (unexpected)"
-    except RefinementError as e:
-        status = "detected: " + str(e).splitlines()[0]
-    print(f"bug {bug:16s} -> {status}")
+# One task per registered bug, each under its host case at degree 2.
+bugs = list_bugs()
+suite = Suite(cases=sorted({host for host, _ in bugs.values()}),
+              degrees=(2,), bugs=sorted(bugs))
+result = suite.run(workers=0)
+
+for report in result:
+    if report.bug is None:
+        continue                      # host clean runs ride along; skip
+    if report.verdict == "refinement_error":
+        status = "detected: " + report.localization["op_name"] + \
+            f" at G_s op #{report.localization['op_index']}"
+    elif report.verdict == "certificate" and \
+            report.expected == "unexpected_relation":
+        status = "detected via unexpected R_o: " + \
+            str(list(report.r_o.values())[0])
+    else:
+        status = f"NOT DETECTED (unexpected verdict {report.verdict})"
+    print(f"bug {report.bug:16s} -> {status}")
+
+sys.exit(0 if result.ok else 1)

@@ -1,5 +1,6 @@
 #!/usr/bin/env sh
-# CI driver mirroring the Makefile targets: scripts/ci.sh [verify|quick|bench-smoke]
+# CI driver mirroring the Makefile targets:
+#   scripts/ci.sh [verify|quick|bench-smoke|suite]
 set -eu
 cd "$(dirname "$0")/.."
 target="${1:-verify}"
@@ -7,5 +8,10 @@ case "$target" in
   verify)      PYTHONPATH=src python -m pytest -x -q ;;
   quick)       PYTHONPATH=src python -m pytest -x -q -m "not slow" ;;
   bench-smoke) python benchmarks/run.py --smoke ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke)" >&2; exit 2 ;;
+  # full clean-case matrix at degree 2 via the suite runner, diffed against
+  # the checked-in golden (verdicts + R_o certificates, no timings)
+  suite)       PYTHONPATH=src python -m repro.api --degrees 2 \
+                 --workers 4 --check tests/golden/suite_degree2.json ;;
+  *) echo "unknown target: $target (verify|quick|bench-smoke|suite)" >&2
+     exit 2 ;;
 esac

@@ -1,0 +1,30 @@
+"""repro.api — the first-class verification API.
+
+Typed task model + pluggable strategy registry + parallel suite runner on
+top of the GraphGuard engine (``repro.core``):
+
+    from repro.api import verify, Suite, register_strategy
+
+    report = verify("tp_layer", degree=2)          # structured Report
+    result = Suite(degrees=(2,)).run(workers=4)    # matrix, process pool
+
+Importing this package populates the registry with the paper-§6 case
+suite from ``repro.dist.strategies``; third-party code registers new
+cases with ``@register_strategy`` without touching core.
+"""
+from .spec import BugSpec, StrategySpec, EXPECTATIONS
+from .registry import (DuplicateStrategyError, RegisteredStrategy, bug_host,
+                       build_spec, get_strategy, list_bugs, list_strategies,
+                       register_strategy)
+from .report import Report, VERDICTS
+from .runner import run_spec, verify
+from .suite import Suite, SuiteResult, SuiteTask
+
+from ..dist import strategies as _strategies  # noqa: F401 — populate registry
+
+__all__ = [
+    "BugSpec", "StrategySpec", "EXPECTATIONS", "DuplicateStrategyError",
+    "RegisteredStrategy", "bug_host", "build_spec", "get_strategy",
+    "list_bugs", "list_strategies", "register_strategy", "Report", "VERDICTS",
+    "run_spec", "verify", "Suite", "SuiteResult", "SuiteTask",
+]

@@ -1,0 +1,11 @@
+"""``python -m repro.api`` — the suite-runner CLI.
+
+(Entry point lives here rather than in ``suite.py`` so the package
+``__init__``'s eager ``.suite`` import and runpy never double-execute the
+module.)
+"""
+import sys
+
+from .suite import main
+
+sys.exit(main())

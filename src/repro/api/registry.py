@@ -1,0 +1,166 @@
+"""Strategy registry: ``@register_strategy`` and spec construction.
+
+The registry is the single source of truth for the verification case
+matrix.  ``repro.dist.strategies`` populates it at import time; third-party
+code can add cases the same way without touching core:
+
+    from repro.api import register_strategy, BugSpec
+
+    @register_strategy("my_case", bugs=[BugSpec("my_bug", "refinement_error")])
+    def my_case(degree=2, bug=None):
+        ...
+        return StrategySpec(seq_fn, dist_fn, axes, specs, avals, names)
+
+A registered builder returns a raw ``StrategySpec`` (or, for legacy code,
+the old 6-tuple — it is normalized); the decorator wrapper stamps the
+case name, degree, bug, and expectation metadata onto the spec and guards
+against running a bug under the wrong host case (which would silently
+verify the clean graph).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+from .spec import BugSpec, StrategySpec
+
+
+@dataclass(frozen=True)
+class RegisteredStrategy:
+    """Registry entry: builder + task metadata for one strategy case."""
+    name: str
+    builder: Callable                    # (degree=, bug=, **kw) -> StrategySpec
+    bugs: Tuple[BugSpec, ...]
+    degrees: Tuple[int, ...]             # degrees the suite sweeps by default
+    expected: str                        # clean-run expectation
+    description: str = ""
+
+    def bug_names(self) -> Tuple[str, ...]:
+        return tuple(b.name for b in self.bugs)
+
+    def bug_spec(self, bug: str) -> BugSpec:
+        for b in self.bugs:
+            if b.name == bug:
+                return b
+        raise KeyError(bug)
+
+
+_REGISTRY: Dict[str, RegisteredStrategy] = {}
+
+
+class DuplicateStrategyError(ValueError):
+    pass
+
+
+def register_strategy(name: str, *, bugs=(), degrees: Tuple[int, ...] = (2, 4),
+                      expected: str = "certificate", description: str = ""):
+    """Class-of-2025 entry point: register a strategy builder under ``name``.
+
+    ``bugs`` is a sequence of ``BugSpec`` (or plain bug-name strings, which
+    default to ``expected="refinement_error"``).  ``expected`` states what
+    the *clean* run should produce ("certificate", or "incomplete" for the
+    documented completeness gaps).  The decorated function must accept
+    ``degree=`` and ``bug=`` keywords and return a ``StrategySpec`` (the
+    legacy 6-tuple is accepted and normalized).
+    """
+    bug_specs = tuple(b if isinstance(b, BugSpec) else BugSpec(str(b))
+                      for b in bugs)
+    if expected not in ("certificate", "incomplete"):
+        raise ValueError(f"clean expectation must be certificate or "
+                         f"incomplete, got {expected!r}")
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise DuplicateStrategyError(
+                f"strategy `{name}` is already registered "
+                f"(by {_REGISTRY[name].builder.__module__})")
+        for entry in _REGISTRY.values():
+            taken = set(entry.bug_names()) & {b.name for b in bug_specs}
+            if taken:
+                # a shadowed bug name would re-host the bug and defeat the
+                # wrong-host guard, silently verifying the clean graph
+                raise DuplicateStrategyError(
+                    f"bug name(s) {sorted(taken)} already registered under "
+                    f"case `{entry.name}`")
+
+        def build(degree: int = 2, bug: Optional[str] = None, **kw):
+            if bug is not None and bug not in {b.name for b in bug_specs}:
+                hosts = [entry.name for entry in _REGISTRY.values()
+                         if bug in entry.bug_names()]
+                raise ValueError(
+                    f"bug `{bug}` belongs to case {hosts or '?'} — running "
+                    f"it under `{name}` would silently verify the clean "
+                    f"graph")
+            raw = fn(degree=degree, bug=bug, **kw)
+            if not isinstance(raw, StrategySpec):
+                seq_fn, dist_fn, axes, specs, avals, names = raw
+                raw = StrategySpec(seq_fn, dist_fn, axes, tuple(specs),
+                                   tuple(avals), tuple(names))
+            exp = expected if bug is None else \
+                next(b.expected for b in bug_specs if b.name == bug)
+            return raw.with_identity(
+                name=name, degree=degree, bug=bug, expected=exp,
+                description=description or (fn.__doc__ or "").strip())
+
+        build.__name__ = fn.__name__
+        build.__doc__ = fn.__doc__
+        build.__wrapped__ = fn
+        _REGISTRY[name] = RegisteredStrategy(
+            name=name, builder=build, bugs=bug_specs,
+            degrees=tuple(degrees), expected=expected,
+            description=description or (fn.__doc__ or "").strip().split("\n")[0])
+        return build
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# lookups
+# ---------------------------------------------------------------------------
+
+def _ensure_populated() -> None:
+    """Strategies self-register on import; make lookups lazy-import them."""
+    if not _REGISTRY:
+        from ..dist import strategies  # noqa: F401  (import side effect)
+
+
+def get_strategy(name: str) -> RegisteredStrategy:
+    _ensure_populated()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy `{name}` — registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_strategies() -> Tuple[str, ...]:
+    _ensure_populated()
+    return tuple(_REGISTRY)
+
+
+def list_bugs() -> Dict[str, Tuple[str, BugSpec]]:
+    """bug name -> (host case name, BugSpec)."""
+    _ensure_populated()
+    out: Dict[str, Tuple[str, BugSpec]] = {}
+    for entry in _REGISTRY.values():
+        for b in entry.bugs:
+            out[b.name] = (entry.name, b)
+    return out
+
+
+def bug_host(bug: str) -> str:
+    try:
+        return list_bugs()[bug][0]
+    except KeyError:
+        raise KeyError(f"unknown bug `{bug}` — registered: "
+                       f"{sorted(list_bugs())}") from None
+
+
+def build_spec(name: str, *, degree: int = 2, bug: Optional[str] = None,
+               **kw) -> StrategySpec:
+    """Materialize one verification task from the registry.
+
+    Raises ``KeyError`` for an unknown case and ``ValueError`` when ``bug``
+    is hosted by a different case (the wrong-host guard).
+    """
+    return get_strategy(name).builder(degree=degree, bug=bug, **kw)

@@ -1,0 +1,75 @@
+"""Structured verification results.
+
+``Report`` is the JSON-ready outcome of one ``verify()`` call — verdict,
+the R_o certificate (stringified clean terms), the localization payload on
+failure, and the engine's per-phase timers — replacing the CLI's
+prints-and-exceptions surface.  The live ``Certificate`` object is attached
+for in-process library use but never serialized (Terms are hash-consed and
+deliberately not picklable), so reports cross process boundaries cheaply.
+
+Verdicts:
+    certificate        refinement holds; ``r_o`` carries the clean relation
+    refinement_error   G_d does not (provably) refine G_s; ``localization``
+                       names the operator (paper §6.2 debugging workflow)
+    error              capture/engine failure (e.g. unsupported primitive)
+    timeout            the suite runner gave up on the task
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Any, Dict, Optional
+
+from .spec import task_id
+
+VERDICTS = ("certificate", "refinement_error", "error", "timeout")
+
+
+@dataclass
+class Report:
+    """Outcome of verifying one (case, degree, bug) task."""
+    case: str
+    degree: int
+    bug: Optional[str]
+    verdict: str                         # one of VERDICTS
+    expected: str                        # registry expectation (spec.expected)
+    ok: bool                             # verdict matches the expectation
+    r_o: Optional[Dict[str, str]] = None        # G_s output -> clean Term str
+    localization: Optional[Dict[str, Any]] = None
+    stats: Optional[Dict[str, Any]] = None      # Certificate.stats (timers &c)
+    error: Optional[str] = None
+    wall_s: float = 0.0
+    certificate: Any = field(default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.verdict not in VERDICTS:
+            raise ValueError(f"verdict must be one of {VERDICTS}, "
+                             f"got {self.verdict!r}")
+
+    # -- serialization ------------------------------------------------------
+    def to_json(self) -> dict:
+        """JSON-safe dict (drops the live certificate object)."""
+        out = {f.name: getattr(self, f.name) for f in fields(self)
+               if f.name != "certificate"}
+        return out
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Report":
+        allowed = {f.name for f in fields(cls)} - {"certificate"}
+        return cls(**{k: v for k, v in d.items() if k in allowed})
+
+    # -- stable views -------------------------------------------------------
+    def task_id(self) -> str:
+        return task_id(self.case, self.degree, self.bug)
+
+    def stable_summary(self) -> dict:
+        """Deterministic fields only (no timings) — golden-diff material."""
+        out = {"verdict": self.verdict, "expected": self.expected,
+               "ok": self.ok}
+        if self.r_o is not None:
+            out["r_o"] = dict(sorted(self.r_o.items()))
+        if self.localization is not None:
+            out["localization"] = {
+                k: self.localization[k]
+                for k in ("op_index", "op_name", "out_name")
+                if k in self.localization}
+        return out

@@ -1,0 +1,131 @@
+"""``verify()`` — the library entry point for one verification task.
+
+    from repro.api import verify
+    report = verify("tp_layer", degree=4)            # -> Report
+    report = verify("sp_rope", bug="rope_offset")    # verdict=refinement_error
+
+Accepts a registered case name or an already-built ``StrategySpec``.
+``engine_opts`` tunes the engine per call without touching process-global
+state afterwards:
+
+    max_nodes       e-graph node budget (default 400_000)
+    optimizations   None (leave the process setting), bool (all flags), or
+                    a {flag: bool} dict of ``repro.core.profile.OptConfig``
+                    overrides — restored after the call either way
+
+``run_spec()`` is the raising flavour (returns the live ``Certificate`` or
+raises ``RefinementError``/``CaptureError``) used by the back-compat CLI
+shim; ``verify()`` wraps it into a structured :class:`~repro.api.Report`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Union
+
+from ..core import (Certificate, RefinementError, capture, capture_spmd,
+                    check_refinement, expand_spmd)
+from ..core.profile import CONFIG, set_optimizations
+from .registry import build_spec
+from .report import Report
+from .spec import StrategySpec
+
+DEFAULT_MAX_NODES = 400_000
+
+
+def _resolve(spec_or_name: Union[str, StrategySpec], degree: Optional[int],
+             bug: Optional[str]) -> StrategySpec:
+    if isinstance(spec_or_name, StrategySpec):
+        if degree is not None or bug is not None:
+            raise ValueError(
+                "degree=/bug= only apply when verifying by name; this "
+                "StrategySpec is already built for "
+                f"degree={spec_or_name.degree}, bug={spec_or_name.bug!r} — "
+                "use dataclasses.replace / build_spec to change it")
+        return spec_or_name
+    return build_spec(spec_or_name, degree=2 if degree is None else degree,
+                      bug=bug)
+
+
+class _engine_opts:
+    """Apply {max_nodes, optimizations} for the duration of one call."""
+
+    def __init__(self, opts: Optional[dict]):
+        opts = dict(opts or {})
+        self.max_nodes = opts.pop("max_nodes", DEFAULT_MAX_NODES)
+        self.optimizations = opts.pop("optimizations", None)
+        if opts:
+            raise ValueError(f"unknown engine_opts: {sorted(opts)}")
+        if isinstance(self.optimizations, dict):
+            unknown = set(self.optimizations) - set(CONFIG.as_dict())
+            if unknown:
+                raise ValueError(
+                    f"unknown optimization flags: {sorted(unknown)} "
+                    f"(valid: {sorted(CONFIG.as_dict())})")
+        self._saved = None
+
+    def __enter__(self):
+        if self.optimizations is not None:
+            self._saved = CONFIG.as_dict()
+            if isinstance(self.optimizations, dict):
+                set_optimizations(True, **{**self._saved,
+                                           **self.optimizations})
+            else:
+                set_optimizations(bool(self.optimizations))
+        return self
+
+    def __exit__(self, *exc):
+        if self._saved is not None:
+            set_optimizations(True, **self._saved)
+        return False
+
+
+def run_spec(spec: StrategySpec, *, engine_opts: Optional[dict] = None
+             ) -> Certificate:
+    """Capture G_s/G_d, derive R_i, and run relation inference (raising)."""
+    if not isinstance(engine_opts, _engine_opts):
+        engine_opts = _engine_opts(engine_opts)
+    with engine_opts as eo:
+        gs = capture(spec.seq_fn, list(spec.avals), list(spec.input_names))
+        cap = capture_spmd(spec.dist_fn, spec.mesh_axes, list(spec.in_specs),
+                           list(spec.avals), list(spec.input_names))
+        gd, r_i = expand_spmd(cap)
+        return check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+
+
+def verify(spec_or_name: Union[str, StrategySpec], *,
+           degree: Optional[int] = None, bug: Optional[str] = None,
+           engine_opts: Optional[dict] = None) -> Report:
+    """Verify one task and return a structured :class:`Report`.
+
+    ``degree`` (default 2) and ``bug`` select the task when verifying by
+    name; passing them alongside an already-built ``StrategySpec`` raises
+    rather than silently ignoring them.  Unknown case/bug names and the
+    bug-under-wrong-case guard also raise (``KeyError``/``ValueError``):
+    those are caller mistakes, not verification outcomes.  Engine-side
+    failures become verdicts.
+    """
+    spec = _resolve(spec_or_name, degree, bug)
+    engine_opts = _engine_opts(engine_opts)   # caller mistakes raise here
+    t0 = time.perf_counter()
+    try:
+        cert = run_spec(spec, engine_opts=engine_opts)
+    except RefinementError as e:
+        verdict, payload = "refinement_error", e.payload()
+        return Report(
+            case=spec.name, degree=spec.degree, bug=spec.bug,
+            verdict=verdict, expected=spec.expected,
+            ok=spec.expected_verdict == verdict, localization=payload,
+            wall_s=round(time.perf_counter() - t0, 6))
+    except Exception as e:  # noqa: BLE001 — CaptureError/engine -> verdict
+        return Report(
+            case=spec.name, degree=spec.degree, bug=spec.bug,
+            verdict="error", expected=spec.expected, ok=False,
+            error=f"{type(e).__name__}: {e}",
+            wall_s=round(time.perf_counter() - t0, 6))
+    cert_json = cert.to_json()
+    return Report(
+        case=spec.name, degree=spec.degree, bug=spec.bug,
+        verdict="certificate", expected=spec.expected,
+        ok=spec.expected_verdict == "certificate",
+        r_o=cert_json["r_o"], stats=cert_json["stats"], certificate=cert,
+        wall_s=round(time.perf_counter() - t0, 6))

@@ -1,0 +1,117 @@
+"""Typed task model for the verification API.
+
+``StrategySpec`` is the frozen, fully-materialized description of one
+verification task: the sequential fragment G_s, the per-rank SPMD
+implementation G_d, the mesh, the input sharding, and the identity /
+expectation metadata the registry stamps on it.  It replaces the anonymous
+``(seq_fn, dist_fn, mesh_axes, in_specs, avals, names)`` 6-tuples the
+strategy builders used to return — but still *iterates* as that 6-tuple,
+so legacy unpacking code keeps working:
+
+    seq_fn, dist_fn, axes, specs, avals, names = build_spec("tp_layer")
+
+``BugSpec`` describes one injectable bug class and how its detection
+surfaces (paper §6.2): ``expected="refinement_error"`` bugs raise at a
+localized operator; ``expected="unexpected_relation"`` bugs (paper bug 5)
+produce a *clean but unexpected* certificate the user inspects.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Optional, Tuple
+
+# Expectation vocabulary (also used by Report.verdict where applicable):
+#   certificate          refinement holds, clean R_o certificate
+#   incomplete           sound false alarm — documented completeness gap:
+#                        the correct implementation raises RefinementError
+#   refinement_error     injected bug is localized via RefinementError
+#   unexpected_relation  clean certificate whose relation differs from the
+#                        user's expectation (paper bug 5 detection mode)
+EXPECTATIONS = ("certificate", "incomplete", "refinement_error",
+                "unexpected_relation")
+
+# What verdict ``verify()`` should produce for each expectation.
+EXPECTED_VERDICT = {
+    "certificate": "certificate",
+    "incomplete": "refinement_error",
+    "refinement_error": "refinement_error",
+    "unexpected_relation": "certificate",
+}
+
+
+def task_id(case: str, degree: int, bug: Optional[str] = None) -> str:
+    """The one stable matrix key: ``case@degN[+bug]`` (used by specs,
+    reports, suite tasks, and the golden file alike)."""
+    base = f"{case}@deg{degree}"
+    return f"{base}+{bug}" if bug else base
+
+
+@dataclass(frozen=True)
+class BugSpec:
+    """One injectable bug class hosted by a strategy."""
+    name: str
+    expected: str = "refinement_error"   # or "unexpected_relation"
+    description: str = ""
+
+    def __post_init__(self):
+        if self.expected not in ("refinement_error", "unexpected_relation"):
+            raise ValueError(
+                f"bug `{self.name}`: expected must be refinement_error or "
+                f"unexpected_relation, got {self.expected!r}")
+
+    @property
+    def raises(self) -> bool:
+        return self.expected == "refinement_error"
+
+
+@dataclass(frozen=True)
+class StrategySpec:
+    """A fully-built verification task (one case at one degree, ± one bug).
+
+    The first six fields mirror the legacy builder tuple; the rest is
+    registry-stamped metadata.  Frozen: derive variants with
+    ``dataclasses.replace``.
+    """
+    seq_fn: Callable
+    dist_fn: Callable
+    mesh_axes: Any                       # {axis name: parallelism degree}
+    in_specs: Tuple[Any, ...]            # PartitionSpec per input -> R_i
+    avals: Tuple[Any, ...]               # ShapeDtypeStruct per global input
+    input_names: Tuple[str, ...]
+    # -- identity / expectation metadata (stamped by the registry) ----------
+    name: str = ""
+    degree: int = 0
+    bug: Optional[str] = None
+    expected: str = "certificate"        # one of EXPECTATIONS
+    description: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "in_specs", tuple(self.in_specs))
+        object.__setattr__(self, "avals", tuple(self.avals))
+        object.__setattr__(self, "input_names", tuple(self.input_names))
+        if self.expected not in EXPECTATIONS:
+            raise ValueError(f"expected must be one of {EXPECTATIONS}, "
+                             f"got {self.expected!r}")
+
+    # -- legacy 6-tuple protocol -------------------------------------------
+    def __iter__(self):
+        yield self.seq_fn
+        yield self.dist_fn
+        yield self.mesh_axes
+        yield list(self.in_specs)
+        yield list(self.avals)
+        yield list(self.input_names)
+
+    def as_tuple(self):
+        return tuple(self)
+
+    # -----------------------------------------------------------------------
+    @property
+    def expected_verdict(self) -> str:
+        return EXPECTED_VERDICT[self.expected]
+
+    def with_identity(self, **kw) -> "StrategySpec":
+        return replace(self, **kw)
+
+    def task_id(self) -> str:
+        return task_id(self.name, self.degree, self.bug)

@@ -1,0 +1,393 @@
+"""``Suite`` — fan a (cases × degrees × bugs) matrix across a process pool.
+
+    from repro.api import Suite
+    result = Suite(degrees=(2,)).run(workers=4)      # clean matrix
+    result = Suite(include_bugs=True).run()          # + all hosted bugs
+    print(result.to_markdown()); result.write("suite.json")
+
+Semantics:
+
+* Tasks are the cross product of ``cases`` × ``degrees``, each case's
+  hosted bugs riding along when ``include_bugs`` (bugs only run under the
+  degrees their host case supports).
+* ``run(workers=0)`` (or 1) executes in-process sequentially;
+  ``workers >= 2`` uses a process pool (fork start method where
+  available, spawn elsewhere) whose workers pre-warm the jax backend in
+  an initializer and persist on the Suite instance across ``run`` calls
+  — call ``shutdown()`` or use the Suite as a context manager to release
+  them.  Workers receive only ``(case, degree, bug)`` name triples and
+  rebuild specs from the registry, so nothing unpicklable crosses the
+  boundary.
+* Results are ordered by the task matrix — never by completion order —
+  and the engine's deterministic tie-breaks make certificates (the
+  ``r_o`` strings) byte-identical for any worker count and any
+  ``GRAPHGUARD_OPT`` setting (covered by ``tests/test_api.py``).
+* ``timeout_s`` is the per-task budget, enforced only on pool runs
+  (``workers >= 2`` — an in-process sequential run cannot interrupt
+  itself).  The happy path dispatches round-robin chunks (one IPC round
+  trip per worker) under a ``timeout_s × chunk-size`` budget; a chunk
+  that exceeds it or crashes is re-run task-by-task on a fresh pool so
+  the offender is reported as ``verdict="timeout"``/``"error"`` under
+  the exact per-task budget, and its wedged worker is killed with the
+  pool.
+
+CLI (also the CI golden gate — see scripts/ci.sh `suite`):
+
+    python -m repro.api [--cases ...] [--degrees 2 4] [--bugs]
+        [--workers N] [--timeout S] [--json PATH] [--markdown PATH]
+        [--check GOLDEN | --write-golden GOLDEN]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import sys
+import time
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .registry import get_strategy, list_bugs, list_strategies
+from .report import Report
+from .runner import verify
+from .spec import task_id as spec_task_id
+
+
+@dataclass(frozen=True)
+class SuiteTask:
+    case: str
+    degree: int
+    bug: Optional[str] = None
+
+    def task_id(self) -> str:
+        return spec_task_id(self.case, self.degree, self.bug)
+
+
+def _run_task(task: Tuple[str, int, Optional[str]],
+              engine_opts: Optional[dict]) -> dict:
+    """Pool worker: rebuild the spec by name and return a JSON-ready dict."""
+    case, degree, bug = task
+    return verify(case, degree=degree, bug=bug,
+                  engine_opts=engine_opts).to_json()
+
+
+def _run_batch(tasks: List[Tuple[str, int, Optional[str]]],
+               engine_opts: Optional[dict]) -> List[dict]:
+    """Pool worker: run a chunk of tasks in one IPC round trip."""
+    return [_run_task(t, engine_opts) for t in tasks]
+
+
+def _warm_worker() -> None:
+    """Pool initializer: pay the per-process jax backend cost up front.
+
+    jax drops its XLA client cache in forked children (and spawn starts
+    cold), so the first jax op in a worker costs hundreds of ms.  Doing it
+    in the initializer moves that cost off the first task's critical path
+    and lets a reused pool serve later ``Suite.run`` calls at steady-state
+    speed.
+    """
+    import jax.numpy as jnp
+    (jnp.zeros((1,)) + 1).block_until_ready()
+
+
+class SuiteResult:
+    """Ordered reports + aggregation to JSON / Markdown."""
+
+    def __init__(self, reports: List[Report], wall_s: float, workers: int):
+        self.reports = reports
+        self.wall_s = wall_s
+        self.workers = workers
+
+    @property
+    def ok(self) -> bool:
+        return all(r.ok for r in self.reports)
+
+    def __iter__(self):
+        return iter(self.reports)
+
+    def __len__(self):
+        return len(self.reports)
+
+    def summary(self) -> dict:
+        verdicts: Dict[str, int] = {}
+        for r in self.reports:
+            verdicts[r.verdict] = verdicts.get(r.verdict, 0) + 1
+        return {
+            "total": len(self.reports),
+            "ok": sum(r.ok for r in self.reports),
+            "not_ok": [r.task_id() for r in self.reports if not r.ok],
+            "verdicts": dict(sorted(verdicts.items())),
+            "wall_s": round(self.wall_s, 3),
+            "workers": self.workers,
+        }
+
+    def stable_summary(self) -> dict:
+        """Timing-free view keyed by task id — the golden-diff artifact."""
+        return {r.task_id(): r.stable_summary() for r in self.reports}
+
+    def to_json(self) -> dict:
+        return {
+            "schema": 1,
+            "summary": self.summary(),
+            "reports": [r.to_json() for r in self.reports],
+        }
+
+    def to_markdown(self) -> str:
+        lines = [
+            "| task | verdict | expected | ok | wall ms |",
+            "|------|---------|----------|----|--------:|",
+        ]
+        for r in self.reports:
+            lines.append(
+                f"| {r.task_id()} | {r.verdict} | {r.expected} "
+                f"| {'yes' if r.ok else '**NO**'} | {r.wall_s * 1e3:.1f} |")
+        s = self.summary()
+        lines.append("")
+        lines.append(f"{s['ok']}/{s['total']} tasks matched expectation in "
+                     f"{s['wall_s']:.2f}s ({s['workers']} workers).")
+        return "\n".join(lines)
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+
+
+class Suite:
+    """A verification task matrix with a parallel runner."""
+
+    def __init__(self, cases: Optional[Sequence[str]] = None,
+                 degrees: Optional[Sequence[int]] = None,
+                 include_bugs: bool = False,
+                 bugs: Optional[Sequence[str]] = None,
+                 engine_opts: Optional[dict] = None):
+        self.cases = tuple(cases) if cases is not None else list_strategies()
+        for c in self.cases:
+            get_strategy(c)              # fail fast on unknown names
+        self.degrees = tuple(degrees) if degrees is not None else None
+        self.include_bugs = include_bugs or bugs is not None
+        self.bugs = tuple(bugs) if bugs is not None else None
+        if self.bugs:
+            hosted = list_bugs()
+            for b in self.bugs:          # fail fast: a typo would otherwise
+                if b not in hosted:      # silently yield zero bug tasks
+                    raise KeyError(f"unknown bug `{b}` — registered: "
+                                   f"{sorted(hosted)}")
+                if hosted[b][0] not in self.cases:
+                    raise ValueError(
+                        f"bug `{b}` is hosted by case `{hosted[b][0]}`, "
+                        f"which is not in this suite's cases — it would "
+                        f"never run")
+        self.engine_opts = engine_opts
+        self._pool: Optional[ProcessPoolExecutor] = None
+        self._pool_workers = 0
+
+    def tasks(self) -> List[SuiteTask]:
+        out: List[SuiteTask] = []
+        for case in self.cases:
+            entry = get_strategy(case)
+            degrees = self.degrees if self.degrees is not None \
+                else entry.degrees
+            for deg in degrees:
+                out.append(SuiteTask(case, deg))
+                if not self.include_bugs:
+                    continue
+                for b in entry.bugs:
+                    if self.bugs is not None and b.name not in self.bugs:
+                        continue
+                    out.append(SuiteTask(case, deg, b.name))
+        return out
+
+    # -- execution ----------------------------------------------------------
+    def run(self, workers: Optional[int] = None,
+            timeout_s: float = 120.0) -> SuiteResult:
+        tasks = self.tasks()
+        if workers is None:
+            workers = min(4, len(tasks)) or 1
+        t0 = time.perf_counter()
+        if workers <= 1:
+            dicts = [_run_task((t.case, t.degree, t.bug), self.engine_opts)
+                     for t in tasks]
+        else:
+            dicts = self._run_pool(tasks, workers, timeout_s)
+        reports = [Report.from_json(d) for d in dicts]
+        return SuiteResult(reports, time.perf_counter() - t0, workers)
+
+    # -- pool lifecycle -----------------------------------------------------
+    def _get_pool(self, workers: int) -> ProcessPoolExecutor:
+        """Create (or reuse) the worker pool.
+
+        The pool persists on the Suite instance across ``run`` calls: the
+        per-worker jax backend re-initialization (see ``_warm_worker``) is
+        paid once, so repeated matrix sweeps run at steady-state speed.
+        Call :meth:`shutdown` (or use the Suite as a context manager) to
+        release the processes.
+        """
+        if self._pool is not None and self._pool_workers != workers:
+            self.shutdown()
+        if self._pool is None:
+            methods = multiprocessing.get_all_start_methods()
+            ctx = multiprocessing.get_context(
+                "fork" if "fork" in methods else "spawn")
+            self._pool = ProcessPoolExecutor(
+                max_workers=workers, mp_context=ctx,
+                initializer=_warm_worker)
+            self._pool_workers = workers
+        return self._pool
+
+    def shutdown(self) -> None:
+        """Release the pool without blocking on wedged workers.
+
+        ``shutdown(wait=True)`` would join a worker stuck in a hung task,
+        so we drop the executor handle and terminate the processes — idle
+        workers die instantly, wedged ones get SIGTERM instead of leaking
+        until their task (never) finishes.
+        """
+        if self._pool is not None:
+            procs = list(getattr(self._pool, "_processes", {}).values())
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            for p in procs:
+                if p.is_alive():
+                    p.terminate()
+            self._pool = None
+            self._pool_workers = 0
+
+    def __enter__(self) -> "Suite":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def _run_pool(self, tasks: List[SuiteTask], workers: int,
+                  timeout_s: float) -> List[dict]:
+        """Chunked fan-out with an individual-retry failure path.
+
+        Tasks are dealt round-robin into one chunk per worker so the happy
+        path costs one IPC round trip per worker instead of per task (the
+        tasks are small; dispatch overhead would otherwise dominate).  A
+        chunk that times out or crashes cannot attribute blame, so its
+        tasks are re-run one-by-one on a fresh pool with the true per-task
+        timeout — slow, but only on the failure path.
+        """
+        workers = min(workers, len(tasks)) or 1
+        pool = self._get_pool(workers)
+        dicts: List[dict] = [None] * len(tasks)  # type: ignore[list-item]
+        chunk_idx = [list(range(len(tasks)))[i::workers]
+                     for i in range(workers)]
+        chunk_idx = [c for c in chunk_idx if c]
+        futs = [pool.submit(
+            _run_batch,
+            [(tasks[i].case, tasks[i].degree, tasks[i].bug) for i in idxs],
+            self.engine_opts) for idxs in chunk_idx]
+        retry: List[int] = []
+        poisoned = False
+        for idxs, fut in zip(chunk_idx, futs):
+            try:
+                for i, d in zip(idxs, fut.result(
+                        timeout=timeout_s * len(idxs))):
+                    dicts[i] = d
+            except Exception:  # noqa: BLE001 — timeout or broken worker
+                fut.cancel()
+                poisoned = True
+                retry.extend(idxs)
+        if poisoned:
+            self.shutdown()              # don't reuse a pool with stuck tasks
+        for i in retry:
+            dicts[i] = self._run_single(tasks[i], timeout_s)
+        if retry:
+            self.shutdown()
+        return dicts
+
+    @staticmethod
+    def _expected(task: SuiteTask) -> str:
+        entry = get_strategy(task.case)
+        if task.bug is None:
+            return entry.expected
+        return entry.bug_spec(task.bug).expected
+
+    def _run_single(self, task: SuiteTask, timeout_s: float) -> dict:
+        """Failure-path execution: one task, one worker, hard timeout."""
+        pool = self._get_pool(1)
+        fut = pool.submit(_run_task, (task.case, task.degree, task.bug),
+                          self.engine_opts)
+        try:
+            return fut.result(timeout=timeout_s)
+        except FutureTimeoutError:
+            fut.cancel()
+            self.shutdown()              # kill the wedged worker
+            return Report(
+                case=task.case, degree=task.degree, bug=task.bug,
+                verdict="timeout", expected=self._expected(task), ok=False,
+                error=f"exceeded per-task timeout of {timeout_s}s",
+                wall_s=timeout_s).to_json()
+        except Exception as e:  # noqa: BLE001 — broken worker
+            self.shutdown()
+            return Report(
+                case=task.case, degree=task.degree, bug=task.bug,
+                verdict="error", expected=self._expected(task), ok=False,
+                error=f"worker failed: {type(e).__name__}: {e}",
+                wall_s=0.0).to_json()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="Run the verification suite matrix in parallel.")
+    ap.add_argument("--cases", nargs="*", default=None,
+                    help="cases to run (default: every registered strategy)")
+    ap.add_argument("--degrees", nargs="*", type=int, default=None,
+                    help="parallelism degrees (default: per-case registry "
+                         "metadata)")
+    ap.add_argument("--bugs", action="store_true",
+                    help="also run every hosted bug variant")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="per-task timeout in seconds")
+    ap.add_argument("--json", default=None, help="write full report JSON")
+    ap.add_argument("--markdown", default=None, help="write Markdown table")
+    ap.add_argument("--check", default=None, metavar="GOLDEN",
+                    help="diff the stable summary against a golden JSON "
+                         "and fail on mismatch")
+    ap.add_argument("--write-golden", default=None, metavar="GOLDEN",
+                    help="write the stable summary as the new golden")
+    args = ap.parse_args(argv)
+
+    suite = Suite(cases=args.cases, degrees=args.degrees,
+                  include_bugs=args.bugs)
+    result = suite.run(workers=args.workers, timeout_s=args.timeout)
+    print(result.to_markdown())
+    if args.json:
+        result.write(args.json)
+        print(f"[suite] wrote {args.json}", file=sys.stderr)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(result.to_markdown() + "\n")
+    if args.write_golden:
+        with open(args.write_golden, "w") as f:
+            json.dump(result.stable_summary(), f, indent=2, sort_keys=True)
+        print(f"[suite] wrote golden {args.write_golden}", file=sys.stderr)
+    rc = 0 if result.ok else 1
+    if args.check:
+        with open(args.check) as f:
+            golden = json.load(f)
+        got = result.stable_summary()
+        if got != golden:
+            missing = sorted(set(golden) - set(got))
+            extra = sorted(set(got) - set(golden))
+            changed = sorted(k for k in set(got) & set(golden)
+                             if got[k] != golden[k])
+            print(f"[suite] GOLDEN MISMATCH vs {args.check}: "
+                  f"missing={missing} extra={extra} changed={changed}",
+                  file=sys.stderr)
+            for k in changed:
+                print(f"  {k}:\n    golden: {golden[k]}\n    got:    {got[k]}",
+                      file=sys.stderr)
+            rc = 1
+        else:
+            print(f"[suite] matches golden {args.check}", file=sys.stderr)
+    return rc

@@ -42,7 +42,7 @@ from .capture import Graph
 from .egraph import EGraph, EGraphLimit
 from .lemmas import all_lemmas
 from .profile import CONFIG, Profile
-from .terms import Term, eval_term
+from .terms import Term, eval_term, pretty
 
 
 def is_dist_name(name: str) -> bool:
@@ -60,6 +60,18 @@ class Certificate:
         """Rebuild G_s outputs from G_d tensor values (executable R_o)."""
         return {name: eval_term(expr, gd_env)
                 for name, expr in self.r_o.items()}
+
+    def to_json(self) -> dict:
+        """JSON-safe view: full-depth stringified R_o + the stats dict.
+
+        The ``repro.api`` Report layer builds on this; r_o strings use
+        unbounded pretty-printing so certificates compare byte-identical
+        across engine configurations and processes.
+        """
+        return {
+            "r_o": {k: pretty(v, 999) for k, v in self.r_o.items()},
+            "stats": self.stats,
+        }
 
 
 class RefinementError(Exception):
@@ -92,6 +104,22 @@ class RefinementError(Exception):
         if message:
             lines.append(message)
         super().__init__("\n".join(lines))
+
+    def payload(self) -> dict:
+        """JSON-safe localization payload (the paper's bug report, typed)."""
+        out = {
+            "op_index": self.op_index,
+            "op_name": self.op_name,
+            "out_name": self.out_name,
+            "input_mappings": {k: pretty(v, 999)
+                               for k, v in self.input_mappings.items()
+                               if v is not None},
+        }
+        if self.diagnostic is not None:
+            expr, n_unclean = self.diagnostic
+            out["diagnostic"] = {"expr": pretty(expr, 999),
+                                 "n_unclean": n_unclean}
+        return out
 
 
 @dataclass

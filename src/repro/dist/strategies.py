@@ -1,23 +1,34 @@
 """Distribution-strategy case suite (paper §6 workloads + §6.2 bug study).
 
-Each builder returns ``(seq_fn, dist_fn, mesh_axes, in_specs, avals, names)``:
+Each builder is registered with ``@register_strategy`` and returns a typed
+:class:`repro.api.StrategySpec` carrying:
 
-  seq_fn     the sequential model fragment G_s (plain jax function)
-  dist_fn    the per-rank SPMD implementation, traced under ``shard_map``
-             by ``capture_spmd`` (collectives allowed)
-  mesh_axes  {axis name: parallelism degree}
-  in_specs   ``PartitionSpec`` per input — ``derive_input_relation`` turns
-             these into R_i
-  avals      ``ShapeDtypeStruct`` per (global) input
-  names      logical input names
+  seq_fn       the sequential model fragment G_s (plain jax function)
+  dist_fn      the per-rank SPMD implementation, traced under ``shard_map``
+               by ``capture_spmd`` (collectives allowed)
+  mesh_axes    {axis name: parallelism degree}
+  in_specs     ``PartitionSpec`` per input — ``derive_input_relation`` turns
+               these into R_i
+  avals        ``ShapeDtypeStruct`` per (global) input
+  input_names  logical input names
+
+plus registry-stamped metadata (case name, degree, bug, expected verdict).
+Specs still unpack as the legacy 6-tuple for older call sites.
 
 ``bug=<name>`` injects one of the six real-world bug classes (paper §6.2)
-into the distributed side; ``BUG_CASES`` maps each bug to its host case and
-whether detection surfaces as a ``RefinementError`` (True) or as an
-unexpected-but-clean certificate the user inspects (False — paper bug 5).
+into the distributed side.  Each bug is declared on its host case as a
+``BugSpec`` whose ``expected`` states how detection surfaces:
+``refinement_error`` (localized raise) or ``unexpected_relation`` (paper
+bug 5 — a clean but unexpected certificate the user inspects).  The two
+documented completeness gaps are ``expected="incomplete"`` on the clean
+case itself (sound false alarm — see EXPERIMENTS.md §Gaps).
 
 Sizes are deliberately small: verification cost is driven by operator count
 and parallelism degree, not tensor extents (the engine is symbolic).
+
+``STRATEGY_CASES`` / ``BUG_CASES`` remain as read-only views for legacy
+callers; the registry (``repro.api.list_strategies``/``list_bugs``) is the
+source of truth.
 """
 from __future__ import annotations
 
@@ -26,6 +37,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from ..api.registry import register_strategy
+from ..api.spec import BugSpec, StrategySpec
 
 
 def _aval(shape):
@@ -36,6 +50,8 @@ def _aval(shape):
 # tp_layer — Megatron-style tensor-parallel MLP block
 # ---------------------------------------------------------------------------
 
+@register_strategy("tp_layer", degrees=(2, 4, 8),
+                   description="Megatron TP MLP (col/row-parallel W1/W2)")
 def tp_transformer_layer(degree: int = 2, bug=None, seq: int = 4,
                          d_model: int = 8, d_ff: int = 8):
     """Column-parallel W1, row-parallel W2, psum to assemble the output.
@@ -51,17 +67,24 @@ def tp_transformer_layer(degree: int = 2, bug=None, seq: int = 4,
         yp = h @ w2                   # w2 row shard -> partial sums
         return jax.lax.psum(yp, "tp")
 
-    axes = {"tp": degree}
-    specs = [P(), P(None, "tp"), P("tp", None)]
-    avals = [_aval((seq, d_model)), _aval((d_model, d_ff)),
-             _aval((d_ff, d_model))]
-    return seq_fn, dist_fn, axes, specs, avals, ["x", "w1", "w2"]
+    return StrategySpec(
+        seq_fn, dist_fn, {"tp": degree},
+        (P(), P(None, "tp"), P("tp", None)),
+        (_aval((seq, d_model)), _aval((d_model, d_ff)),
+         _aval((d_ff, d_model))),
+        ("x", "w1", "w2"))
 
 
 # ---------------------------------------------------------------------------
 # sp_rope — sequence-parallel rotary position embedding
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "sp_rope", degrees=(2, 4, 8),
+    bugs=[BugSpec("rope_offset", "refinement_error",
+                  "every rank slices cos/sin at local positions (offset 0) "
+                  "— the vLLM/Neuron bug class")],
+    description="sequence-parallel rotary embedding (offset slices)")
 def sp_rope_layer(degree: int = 2, bug=None, seq: int = 8, d_model: int = 8):
     """Rotary embedding under a sequence shard: each rank must slice the
     cos/sin tables at its *global* position offset (rank * chunk).
@@ -93,15 +116,20 @@ def sp_rope_layer(degree: int = 2, bug=None, seq: int = 8, d_model: int = 8):
         y2 = x2 * c + x1 * s
         return jnp.concatenate([y1, y2], axis=1)
 
-    axes = {"sp": degree}
-    specs = [P("sp", None)]
-    return seq_fn, dist_fn, axes, specs, [_aval((seq, d_model))], ["x"]
+    return StrategySpec(seq_fn, dist_fn, {"sp": degree}, (P("sp", None),),
+                        (_aval((seq, d_model)),), ("x",))
 
 
 # ---------------------------------------------------------------------------
 # sp_pad — pad-to-block then slice-off under a sequence shard
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "sp_pad", degrees=(2, 4, 8),
+    bugs=[BugSpec("pad_slice", "refinement_error",
+                  "the slice keeps padding rows and drops real tokens — "
+                  "the pad/slice mismatch class")],
+    description="pad-to-block + slice-off per rank")
 def sp_pad_slice(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4,
                  pad: int = 2):
     """Each rank pads its shard to a kernel block size, computes, then
@@ -121,15 +149,20 @@ def sp_pad_slice(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4,
             return h[pad:pad + chunk]     # BUG: off-by-pad slice
         return h[:chunk]
 
-    axes = {"sp": degree}
-    specs = [P("sp", None)]
-    return seq_fn, dist_fn, axes, specs, [_aval((seq, d_model))], ["x"]
+    return StrategySpec(seq_fn, dist_fn, {"sp": degree}, (P("sp", None),),
+                        (_aval((seq, d_model)),), ("x",))
 
 
 # ---------------------------------------------------------------------------
 # ep_moe — expert-parallel MoE with pre-routed tokens
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "ep_moe", degrees=(2, 4, 8),
+    bugs=[BugSpec("sharded_expert", "refinement_error",
+                  "expert-to-shard mapping rotated via ppermute — each rank "
+                  "applies its neighbour's expert weights")],
+    description="expert-parallel MoE, pre-routed tokens")
 def ep_moe_layer(degree: int = 2, bug=None, tokens: int = 4, d_model: int = 4):
     """Expert e lives on rank e; tokens arrive pre-sorted by expert, so the
     token shard on rank e is exactly expert e's batch. Bug `sharded_expert`:
@@ -152,17 +185,23 @@ def ep_moe_layer(degree: int = 2, bug=None, tokens: int = 4, d_model: int = 4):
                 we, "ep", [(i, (i + 1) % n_exp) for i in range(n_exp)])
         return x @ we
 
-    axes = {"ep": degree}
-    specs = [P("ep", None), P("ep", None, None)]
-    avals = [_aval((n_exp * tokens, d_model)),
-             _aval((n_exp, d_model, d_model))]
-    return seq_fn, dist_fn, axes, specs, avals, ["x", "w"]
+    return StrategySpec(
+        seq_fn, dist_fn, {"ep": degree},
+        (P("ep", None), P("ep", None, None)),
+        (_aval((n_exp * tokens, d_model)), _aval((n_exp, d_model, d_model))),
+        ("x", "w"))
 
 
 # ---------------------------------------------------------------------------
 # aux_loss — auxiliary-loss normalization (documented completeness gap)
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "aux_loss", degrees=(2, 4, 8), expected="incomplete",
+    bugs=[BugSpec("aux_scale", "refinement_error",
+                  "each rank averages by its local element count before the "
+                  "psum, inflating the loss by the parallelism degree")],
+    description="aux-loss normalization (reduce-of-reshape gap)")
 def aux_loss_scale(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
     """Load-balancing-style scalar loss. The sequential side sums a
     *flattened* view while the distributed side reduces both axes at once —
@@ -185,15 +224,16 @@ def aux_loss_scale(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
             return jax.lax.psum(loc / local_n, "ep")   # BUG: degree x too big
         return jax.lax.psum(loc, "ep") / n
 
-    axes = {"ep": degree}
-    specs = [P("ep", None)]
-    return seq_fn, dist_fn, axes, specs, [_aval((seq, d_model))], ["p"]
+    return StrategySpec(seq_fn, dist_fn, {"ep": degree}, (P("ep", None),),
+                        (_aval((seq, d_model)),), ("p",))
 
 
 # ---------------------------------------------------------------------------
 # sp_moe — sequence-parallel gated FFN stack (the fig5 scaling case)
 # ---------------------------------------------------------------------------
 
+@register_strategy("sp_moe", degrees=(2, 4, 8),
+                   description="4x chained gated FFN, sequence-parallel")
 def sp_moe_layer(degree: int = 2, bug=None, seq: int = 16, d_model: int = 8,
                  d_ff: int = 8):
     """Four chained gated-FFN blocks under a sequence shard with replicated
@@ -216,17 +256,24 @@ def sp_moe_layer(degree: int = 2, bug=None, seq: int = 16, d_model: int = 8,
 
     dist_fn = seq_fn                  # same per-rank program, sharded inputs
 
-    axes = {"sp": degree}
-    specs = [P("sp", None), P(), P(), P()]
-    avals = [_aval((seq, d_model)), _aval((d_model, d_ff)),
-             _aval((d_model, d_ff)), _aval((d_ff, d_model))]
-    return seq_fn, dist_fn, axes, specs, avals, ["x", "wg", "w1", "w2"]
+    return StrategySpec(
+        seq_fn, dist_fn, {"sp": degree},
+        (P("sp", None), P(), P(), P()),
+        (_aval((seq, d_model)), _aval((d_model, d_ff)),
+         _aval((d_model, d_ff)), _aval((d_ff, d_model))),
+        ("x", "wg", "w1", "w2"))
 
 
 # ---------------------------------------------------------------------------
 # grad_accum — microbatch gradient accumulation (documented completeness gap)
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "grad_accum", degrees=(2, 4), expected="incomplete",
+    bugs=[BugSpec("grad_accum", "refinement_error",
+                  "final normalization divides by the per-rank element "
+                  "count — accumulated gradients n_steps x too large")],
+    description="microbatch grad accumulation (dus-buffer gap)")
 def grad_accum_step(degree: int = 2, bug=None, batch: int = 8,
                     d_model: int = 4):
     """Data-parallel gradient step with per-rank microbatch accumulation
@@ -255,15 +302,20 @@ def grad_accum_step(degree: int = 2, bug=None, batch: int = 8,
         denom = local if bug == "grad_accum" else batch   # BUG: missing 1/deg
         return tot / denom
 
-    axes = {"dp": degree}
-    specs = [P("dp", None)]
-    return seq_fn, dist_fn, axes, specs, [_aval((batch, d_model))], ["x"]
+    return StrategySpec(seq_fn, dist_fn, {"dp": degree}, (P("dp", None),),
+                        (_aval((batch, d_model)),), ("x",))
 
 
 # ---------------------------------------------------------------------------
 # ln_grad — layer-norm weight gradient under sequence parallelism
 # ---------------------------------------------------------------------------
 
+@register_strategy(
+    "ln_grad", degrees=(2, 4, 8),
+    bugs=[BugSpec("ln_no_allreduce", "unexpected_relation",
+                  "the psum is skipped — no raise, but the certificate is a "
+                  "cross-rank add instead of an identity map (paper bug 5)")],
+    description="layer-norm weight grad over sharded seq")
 def ln_weight_grad(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
     """The weight-gradient reduction of a norm layer: sum over the (sharded)
     sequence axis needs a cross-rank all-reduce. Bug `ln_no_allreduce`
@@ -281,35 +333,23 @@ def ln_weight_grad(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
             return loc                # BUG: per-rank partial, no all-reduce
         return jax.lax.psum(loc, "sp")
 
-    axes = {"sp": degree}
-    specs = [P("sp", None), P("sp", None)]
-    avals = [_aval((seq, d_model)), _aval((seq, d_model))]
-    return seq_fn, dist_fn, axes, specs, avals, ["dy", "xhat"]
+    return StrategySpec(
+        seq_fn, dist_fn, {"sp": degree}, (P("sp", None), P("sp", None)),
+        (_aval((seq, d_model)), _aval((seq, d_model))),
+        ("dy", "xhat"))
 
 
 # ---------------------------------------------------------------------------
-# registries
+# legacy views (source of truth: the repro.api registry)
 # ---------------------------------------------------------------------------
 
-STRATEGY_CASES = {
-    "tp_layer": tp_transformer_layer,
-    "sp_rope": sp_rope_layer,
-    "sp_pad": sp_pad_slice,
-    "ep_moe": ep_moe_layer,
-    "aux_loss": aux_loss_scale,
-    "sp_moe": sp_moe_layer,
-    "grad_accum": grad_accum_step,
-    "ln_grad": ln_weight_grad,
-}
+from ..api.registry import get_strategy as _get, list_bugs as _list_bugs, \
+    list_strategies as _list_strategies  # noqa: E402 — after registration
+
+STRATEGY_CASES = {name: _get(name).builder for name in _list_strategies()}
 
 # bug name -> (host case builder, detection raises RefinementError?)
 # False = paper bug 5 style: certificate is produced but its relation is not
 # the one the user expects (inspected, not raised).
-BUG_CASES = {
-    "rope_offset": (sp_rope_layer, True),
-    "aux_scale": (aux_loss_scale, True),
-    "pad_slice": (sp_pad_slice, True),
-    "sharded_expert": (ep_moe_layer, True),
-    "grad_accum": (grad_accum_step, True),
-    "ln_no_allreduce": (ln_weight_grad, False),
-}
+BUG_CASES = {bug: (_get(host).builder, bspec.raises)
+             for bug, (host, bspec) in _list_bugs().items()}

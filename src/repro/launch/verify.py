@@ -1,52 +1,39 @@
-"""GraphGuard pre-launch verification CLI.
+"""GraphGuard pre-launch verification CLI (thin shim over ``repro.api``).
 
     python -m repro.launch.verify --case tp_layer [--bug rope_offset] \
-        [--degree 2]
+        [--degree 2] [--json] [--list]
 
 Captures the sequential layer and its shard_map distributed implementation,
 derives R_i from the PartitionSpecs, runs iterative relation inference, and
 prints the certificate R_o (or the localized bug report).
+
+The case matrix lives in the ``repro.api`` registry (populated by
+``repro.dist.strategies`` and any third-party ``@register_strategy``
+call sites) — this module keeps the historical ``run_case``/``CASES``
+surface and CLI output stable on top of it.  ``--list`` prints the
+registered cases and bugs; ``--json`` emits the structured
+``repro.api.Report`` instead of the human-readable text.  For matrix runs
+use the suite runner: ``python -m repro.api``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
-from ..core import (capture, capture_spmd, check_refinement, expand_spmd,
-                    RefinementError)
-from ..dist import strategies as S
-
-CASES = {
-    "tp_layer": S.tp_transformer_layer,
-    "sp_rope": S.sp_rope_layer,
-    "sp_pad": S.sp_pad_slice,
-    "ep_moe": S.ep_moe_layer,
-    "aux_loss": S.aux_loss_scale,
-    "sp_moe": S.sp_moe_layer,
-    "grad_accum": S.grad_accum_step,
-    "ln_grad": S.ln_weight_grad,
-}
+from ..api import (build_spec, get_strategy, list_bugs, list_strategies,
+                   run_spec, verify)
+from ..core import RefinementError
+from ..dist.strategies import STRATEGY_CASES as CASES  # legacy view re-export
 
 
 def run_case(case: str, bug=None, degree: int = 2, max_nodes=400_000,
              quiet=False):
-    builder = CASES[case]
-    if bug is not None:
-        host = S.BUG_CASES[bug][0]
-        if host is not builder:
-            hosts = [k for k, b in CASES.items() if b is host]
-            raise ValueError(
-                f"bug `{bug}` belongs to case {hosts or '?'} — running it "
-                f"under `{case}` would silently verify the clean graph")
-    seq_fn, dist_fn, mesh_axes, in_specs, avals, names = builder(
-        degree=degree, bug=bug)
-    gs = capture(seq_fn, avals, names)
-    cap = capture_spmd(dist_fn, mesh_axes, in_specs, avals, names)
-    gd, r_i = expand_spmd(cap)
-    cert = check_refinement(gs, gd, r_i, max_nodes=max_nodes)
+    spec = build_spec(case, degree=degree, bug=bug)
+    cert = run_spec(spec, engine_opts={"max_nodes": max_nodes})
     if not quiet:
         print(f"[verify] {case} degree={degree} bug={bug}: "
-              f"G_s ops={gs.n_ops} G_d ops={gd.n_ops}")
+              f"G_s ops={cert.stats['gs_ops']} G_d ops={cert.stats['gd_ops']}")
         print("R_o certificate:")
         for k, v in cert.r_o.items():
             print(f"  {k} = {v}")
@@ -55,12 +42,39 @@ def run_case(case: str, bug=None, degree: int = 2, max_nodes=400_000,
     return cert
 
 
+def _print_registry():
+    print("registered cases (repro.api registry):")
+    for name in list_strategies():
+        entry = get_strategy(name)
+        bugs = ", ".join(entry.bug_names()) or "-"
+        degs = "/".join(str(d) for d in entry.degrees)
+        print(f"  {name:12s} degrees={degs:8s} expected={entry.expected:12s} "
+              f"bugs: {bugs}")
+    print("registered bugs (bug -> host case, detection):")
+    for bug, (host, bspec) in sorted(list_bugs().items()):
+        print(f"  {bug:16s} -> {host:12s} ({bspec.expected})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--case", default="tp_layer", choices=list(CASES))
-    ap.add_argument("--bug", default=None, choices=[None] + list(S.BUG_CASES))
+    ap.add_argument("--case", default="tp_layer", choices=list_strategies())
+    ap.add_argument("--bug", default=None, choices=sorted(list_bugs()),
+                    help="inject a bug class (must be hosted by --case)")
     ap.add_argument("--degree", type=int, default=2)
+    ap.add_argument("--list", action="store_true",
+                    help="print registered cases/bugs and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the structured Report as JSON")
     args = ap.parse_args(argv)
+    if args.list:
+        _print_registry()
+        return
+    if args.json:
+        report = verify(args.case, degree=args.degree, bug=args.bug)
+        print(json.dumps(report.to_json(), indent=2, sort_keys=True))
+        if report.verdict != "certificate":
+            sys.exit(1)
+        return
     try:
         run_case(args.case, args.bug, args.degree)
         print("REFINEMENT HOLDS (certificate above)")
