@@ -3,7 +3,7 @@
 PY ?= python
 PYTEST ?= $(PY) -m pytest
 
-.PHONY: verify quick bench-smoke bench bug-suite suite
+.PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden
 
 # tier-1 gate: full test suite
 verify:
@@ -13,15 +13,20 @@ verify:
 quick:
 	PYTHONPATH=src $(PYTEST) -x -q -m "not slow"
 
-# verification benchmark sections only, single repeat — CI smoke
+# verification benchmark sections only, median-of-3 — CI smoke
 bench-smoke:
-	$(PY) benchmarks/run.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/run.py --smoke
 
 # full benchmark incl. engine ablation; writes BENCH_verify.json
 bench:
-	$(PY) benchmarks/run.py
+	PYTHONPATH=src $(PY) benchmarks/run.py
 
-# reproduce the paper §6.2 six-bug case study
+# perf gate: fresh --smoke medians vs the checked-in BENCH_verify.json
+# (1.5x default tolerance on the inference hot path; see scripts/check_bench.py)
+bench-gate: bench-smoke
+	$(PY) scripts/check_bench.py
+
+# reproduce the paper §6.2 bug case study (all registered bug classes)
 bug-suite:
 	PYTHONPATH=src $(PY) examples/verify_bug_suite.py
 
@@ -30,3 +35,8 @@ bug-suite:
 suite:
 	PYTHONPATH=src $(PY) -m repro.api --degrees 2 --workers 4 \
 		--check tests/golden/suite_degree2.json
+
+# deterministically regenerate tests/golden/*.json after a strategy change
+# (refuses to bake in a failing matrix)
+golden:
+	PYTHONPATH=src $(PY) -m repro.api --update-golden --workers 4

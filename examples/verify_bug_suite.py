@@ -1,5 +1,6 @@
-"""Reproduce the paper's §6.2 case study: all six real-world bug classes,
-driven through the ``repro.api`` suite runner.
+"""Reproduce the paper's §6.2 case study over every registered bug class
+(the paper's six plus the FSDP / pipeline / 2D-mesh families), driven
+through the ``repro.api`` suite runner.
 
     PYTHONPATH=src python examples/verify_bug_suite.py
 """

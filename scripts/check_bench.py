@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Perf gate: compare a fresh ``benchmarks/run.py --smoke`` run against the
+checked-in ``BENCH_verify.json`` medians and fail on regression of the
+relation-inference hot path.
+
+    python benchmarks/run.py --smoke        # writes BENCH_verify_smoke.json
+    python scripts/check_bench.py [--tolerance 1.5]
+
+Every case in the baseline's smoke sections (fig4 / fig5) must be present
+in the fresh run and its ``infer_ms`` must stay under
+``max(baseline, --min-ms) * tolerance`` — the ``--min-ms`` floor keeps
+sub-millisecond cases from tripping the gate on scheduler noise.  The
+tolerance (default 1.5x, overridable via ``$BENCH_TOLERANCE``) absorbs the
+single-repeat smoke run landing on a noisy CI runner; a real hot-path
+regression (the PR-1/PR-2 optimizations were 1.4-4x) clears it easily.
+
+Exit codes: 0 ok, 1 regression/missing case, 2 missing input file.
+"""
+import argparse
+import json
+import os
+import sys
+
+# the sections a --smoke run produces; both carry the hot-path metric
+SMOKE_SECTIONS = ("fig4", "fig5")
+METRIC = "infer_ms"
+
+
+def collect(bench: dict) -> dict:
+    """{"section/case": infer_ms} for every timed case in the smoke sections."""
+    out = {}
+    for sec in SMOKE_SECTIONS:
+        for case, rec in bench.get(sec, {}).items():
+            if isinstance(rec, dict) and METRIC in rec:
+                out[f"{sec}/{case}"] = float(rec[METRIC])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when a fresh smoke benchmark regresses the "
+                    "inference hot path vs the checked-in baseline.")
+    ap.add_argument("--baseline", default="BENCH_verify.json",
+                    help="checked-in full benchmark artifact")
+    ap.add_argument("--fresh", default="BENCH_verify_smoke.json",
+                    help="artifact written by `benchmarks/run.py --smoke`")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", "1.5")),
+                    help="allowed slowdown factor (default 1.5, or "
+                         "$BENCH_TOLERANCE)")
+    ap.add_argument("--min-ms", type=float, default=1.0,
+                    help="noise floor: baselines below this compare "
+                         "against min-ms instead (default 1.0)")
+    args = ap.parse_args(argv)
+    if args.tolerance <= 0:
+        ap.error("--tolerance must be positive")
+
+    for path in (args.baseline, args.fresh):
+        if not os.path.exists(path):
+            print(f"[bench-gate] missing {path} — run "
+                  f"`benchmarks/run.py{' --smoke' if path == args.fresh else ''}`"
+                  f" first", file=sys.stderr)
+            return 2
+    with open(args.baseline) as f:
+        base = collect(json.load(f))
+    with open(args.fresh) as f:
+        fresh = collect(json.load(f))
+    if not base:
+        print(f"[bench-gate] baseline {args.baseline} has no smoke-section "
+              f"cases — regenerate it with `make bench`", file=sys.stderr)
+        return 2
+
+    failures = []
+    for case in sorted(base):
+        if case not in fresh:
+            failures.append(f"{case}: missing from fresh run "
+                            f"(section errored or case was removed)")
+            continue
+        limit = max(base[case], args.min_ms) * args.tolerance
+        status = "ok"
+        if fresh[case] > limit:
+            status = "REGRESSED"
+            failures.append(
+                f"{case}: {fresh[case]:.2f} ms vs baseline "
+                f"{base[case]:.2f} ms (limit {limit:.2f} ms at "
+                f"{args.tolerance:g}x)")
+        print(f"[bench-gate] {case:28s} base={base[case]:9.2f} ms  "
+              f"fresh={fresh[case]:9.2f} ms  {status}")
+    for case in sorted(set(fresh) - set(base)):
+        print(f"[bench-gate] {case:28s} new case "
+              f"({fresh[case]:.2f} ms) — not gated until `make bench` "
+              f"refreshes the baseline")
+
+    if failures:
+        print(f"[bench-gate] FAIL: {len(failures)} hot-path regression(s):",
+              file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"[bench-gate] ok: {len(base)} case(s) within "
+          f"{args.tolerance:g}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

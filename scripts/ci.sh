@@ -1,17 +1,25 @@
 #!/usr/bin/env sh
 # CI driver mirroring the Makefile targets:
-#   scripts/ci.sh [verify|quick|bench-smoke|suite]
+#   scripts/ci.sh [verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden]
 set -eu
 cd "$(dirname "$0")/.."
 target="${1:-verify}"
 case "$target" in
   verify)      PYTHONPATH=src python -m pytest -x -q ;;
   quick)       PYTHONPATH=src python -m pytest -x -q -m "not slow" ;;
-  bench-smoke) python benchmarks/run.py --smoke ;;
+  bench-smoke) PYTHONPATH=src python benchmarks/run.py --smoke ;;
+  # perf gate: fresh --smoke medians vs the checked-in BENCH_verify.json
+  bench-gate)  PYTHONPATH=src python benchmarks/run.py --smoke
+               python scripts/check_bench.py ;;
+  # paper §6.2 bug case study: every registered bug class must be detected
+  bug-suite)   PYTHONPATH=src python examples/verify_bug_suite.py ;;
   # full clean-case matrix at degree 2 via the suite runner, diffed against
   # the checked-in golden (verdicts + R_o certificates, no timings)
   suite)       PYTHONPATH=src python -m repro.api --degrees 2 \
                  --workers 4 --check tests/golden/suite_degree2.json ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|suite)" >&2
+  # deterministically regenerate tests/golden/*.json after a strategy change
+  golden)      PYTHONPATH=src python -m repro.api --update-golden \
+                 --workers 4 ;;
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden)" >&2
      exit 2 ;;
 esac

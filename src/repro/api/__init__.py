@@ -12,7 +12,8 @@ Importing this package populates the registry with the paper-§6 case
 suite from ``repro.dist.strategies``; third-party code registers new
 cases with ``@register_strategy`` without touching core.
 """
-from .spec import BugSpec, StrategySpec, EXPECTATIONS
+from .spec import (BugSpec, Degree, StrategySpec, EXPECTATIONS, axis_degrees,
+                   degree_token, normalize_degree, parse_degree)
 from .registry import (DuplicateStrategyError, RegisteredStrategy, bug_host,
                        build_spec, get_strategy, list_bugs, list_strategies,
                        register_strategy)
@@ -23,8 +24,10 @@ from .suite import Suite, SuiteResult, SuiteTask
 from ..dist import strategies as _strategies  # noqa: F401 — populate registry
 
 __all__ = [
-    "BugSpec", "StrategySpec", "EXPECTATIONS", "DuplicateStrategyError",
-    "RegisteredStrategy", "bug_host", "build_spec", "get_strategy",
-    "list_bugs", "list_strategies", "register_strategy", "Report", "VERDICTS",
-    "run_spec", "verify", "Suite", "SuiteResult", "SuiteTask",
+    "BugSpec", "Degree", "StrategySpec", "EXPECTATIONS", "axis_degrees",
+    "degree_token", "normalize_degree", "parse_degree",
+    "DuplicateStrategyError", "RegisteredStrategy", "bug_host", "build_spec",
+    "get_strategy", "list_bugs", "list_strategies", "register_strategy",
+    "Report", "VERDICTS", "run_spec", "verify", "Suite", "SuiteResult",
+    "SuiteTask",
 ]

@@ -22,7 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
 
-from .spec import BugSpec, StrategySpec
+from .spec import BugSpec, Degree, StrategySpec, normalize_degree
 
 
 @dataclass(frozen=True)
@@ -31,12 +31,36 @@ class RegisteredStrategy:
     name: str
     builder: Callable                    # (degree=, bug=, **kw) -> StrategySpec
     bugs: Tuple[BugSpec, ...]
-    degrees: Tuple[int, ...]             # degrees the suite sweeps by default
+    degrees: Tuple[Degree, ...]          # degrees the suite sweeps by default
+                                         # (ints, or per-mesh-axis tuples)
     expected: str                        # clean-run expectation
     description: str = ""
 
     def bug_names(self) -> Tuple[str, ...]:
         return tuple(b.name for b in self.bugs)
+
+    def validate_degree(self, degree: Degree) -> Degree:
+        """Reject per-axis tuple degrees a case cannot take.
+
+        The registered default ``degrees`` carry the case's shape: a case
+        whose defaults are all ints is single-axis (its builder does int
+        arithmetic on ``degree`` and would die with an opaque TypeError on
+        a tuple); a multi-axis case declares tuple defaults whose arity a
+        tuple override must match.  Scalars are always fine — multi-axis
+        builders broadcast them over the mesh (``axis_degrees``).
+        """
+        degree = normalize_degree(degree)
+        if isinstance(degree, tuple):
+            arities = {len(d) for d in self.degrees if isinstance(d, tuple)}
+            if not arities:
+                raise ValueError(
+                    f"case `{self.name}` is single-axis — it takes an int "
+                    f"degree, not the per-axis tuple {degree}")
+            if len(degree) not in arities:
+                raise ValueError(
+                    f"case `{self.name}` takes {sorted(arities)}-axis "
+                    f"degrees, got {degree}")
+        return degree
 
     def bug_spec(self, bug: str) -> BugSpec:
         for b in self.bugs:
@@ -52,16 +76,18 @@ class DuplicateStrategyError(ValueError):
     pass
 
 
-def register_strategy(name: str, *, bugs=(), degrees: Tuple[int, ...] = (2, 4),
+def register_strategy(name: str, *, bugs=(),
+                      degrees: Tuple[Degree, ...] = (2, 4),
                       expected: str = "certificate", description: str = ""):
     """Class-of-2025 entry point: register a strategy builder under ``name``.
 
     ``bugs`` is a sequence of ``BugSpec`` (or plain bug-name strings, which
     default to ``expected="refinement_error"``).  ``expected`` states what
     the *clean* run should produce ("certificate", or "incomplete" for the
-    documented completeness gaps).  The decorated function must accept
-    ``degree=`` and ``bug=`` keywords and return a ``StrategySpec`` (the
-    legacy 6-tuple is accepted and normalized).
+    documented completeness gaps).  ``degrees`` entries are ints or, for a
+    multi-axis mesh, per-axis tuples like ``(4, 2)``.  The decorated
+    function must accept ``degree=`` and ``bug=`` keywords and return a
+    ``StrategySpec`` (the legacy 6-tuple is accepted and normalized).
     """
     bug_specs = tuple(b if isinstance(b, BugSpec) else BugSpec(str(b))
                       for b in bugs)
@@ -83,7 +109,8 @@ def register_strategy(name: str, *, bugs=(), degrees: Tuple[int, ...] = (2, 4),
                     f"bug name(s) {sorted(taken)} already registered under "
                     f"case `{entry.name}`")
 
-        def build(degree: int = 2, bug: Optional[str] = None, **kw):
+        def build(degree: Degree = 2, bug: Optional[str] = None, **kw):
+            degree = _REGISTRY[name].validate_degree(degree)
             if bug is not None and bug not in {b.name for b in bug_specs}:
                 hosts = [entry.name for entry in _REGISTRY.values()
                          if bug in entry.bug_names()]
@@ -107,7 +134,8 @@ def register_strategy(name: str, *, bugs=(), degrees: Tuple[int, ...] = (2, 4),
         build.__wrapped__ = fn
         _REGISTRY[name] = RegisteredStrategy(
             name=name, builder=build, bugs=bug_specs,
-            degrees=tuple(degrees), expected=expected,
+            degrees=tuple(normalize_degree(d) for d in degrees),
+            expected=expected,
             description=description or (fn.__doc__ or "").strip().split("\n")[0])
         return build
 
@@ -156,7 +184,7 @@ def bug_host(bug: str) -> str:
                        f"{sorted(list_bugs())}") from None
 
 
-def build_spec(name: str, *, degree: int = 2, bug: Optional[str] = None,
+def build_spec(name: str, *, degree: Degree = 2, bug: Optional[str] = None,
                **kw) -> StrategySpec:
     """Materialize one verification task from the registry.
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field, fields
 from typing import Any, Dict, Optional
 
-from .spec import task_id
+from .spec import Degree, normalize_degree, task_id
 
 VERDICTS = ("certificate", "refinement_error", "error", "timeout")
 
@@ -28,7 +28,7 @@ VERDICTS = ("certificate", "refinement_error", "error", "timeout")
 class Report:
     """Outcome of verifying one (case, degree, bug) task."""
     case: str
-    degree: int
+    degree: Degree                       # int, or one entry per mesh axis
     bug: Optional[str]
     verdict: str                         # one of VERDICTS
     expected: str                        # registry expectation (spec.expected)
@@ -41,6 +41,8 @@ class Report:
     certificate: Any = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
+        # tuple degrees arrive as lists after a JSON round trip
+        self.degree = normalize_degree(self.degree)
         if self.verdict not in VERDICTS:
             raise ValueError(f"verdict must be one of {VERDICTS}, "
                              f"got {self.verdict!r}")

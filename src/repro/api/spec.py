@@ -18,7 +18,12 @@ produce a *clean but unexpected* certificate the user inspects.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple, Union
+
+# A parallelism degree is either a single int (applied to every mesh axis)
+# or a tuple with one entry per mesh axis, e.g. ``(4, 2)`` for a 2D
+# ``{"dp": 4, "tp": 2}`` mesh.
+Degree = Union[int, Tuple[int, ...]]
 
 # Expectation vocabulary (also used by Report.verdict where applicable):
 #   certificate          refinement holds, clean R_o certificate
@@ -39,10 +44,56 @@ EXPECTED_VERDICT = {
 }
 
 
-def task_id(case: str, degree: int, bug: Optional[str] = None) -> str:
+def normalize_degree(degree: Degree) -> Degree:
+    """Canonical degree value: ints stay ints, sequences become tuples,
+    and a 1-tuple collapses to its int (so JSON round-trips — where tuples
+    come back as lists — and CLI parses agree on one representation)."""
+    if isinstance(degree, (tuple, list)):
+        t = tuple(int(d) for d in degree)
+        return t[0] if len(t) == 1 else t
+    return int(degree)
+
+
+def degree_token(degree: Degree) -> str:
+    """Stable string form of a degree: ``4`` -> "4", ``(2, 4)`` -> "2x4"."""
+    degree = normalize_degree(degree)
+    if isinstance(degree, tuple):
+        return "x".join(str(d) for d in degree)
+    return str(degree)
+
+
+def parse_degree(token: str) -> Degree:
+    """Inverse of :func:`degree_token` for CLI args: "4" -> 4,
+    "2x4" -> (2, 4)."""
+    try:
+        parts = [int(p) for p in str(token).split("x")]
+        if any(p < 1 for p in parts):
+            raise ValueError(token)
+        return normalize_degree(parts)
+    except ValueError:
+        raise ValueError(
+            f"bad degree {token!r} — expected a positive int like `4` or a "
+            f"per-axis tuple like `2x4`") from None
+
+
+def axis_degrees(degree: Degree, n_axes: int) -> Tuple[int, ...]:
+    """Per-axis view of a degree for an ``n_axes``-dimensional mesh: a
+    scalar broadcasts to every axis, a tuple must match the axis count."""
+    degree = normalize_degree(degree)
+    if isinstance(degree, tuple):
+        if len(degree) != n_axes:
+            raise ValueError(
+                f"degree {degree} has {len(degree)} entries for a "
+                f"{n_axes}-axis mesh")
+        return degree
+    return (degree,) * n_axes
+
+
+def task_id(case: str, degree: Degree, bug: Optional[str] = None) -> str:
     """The one stable matrix key: ``case@degN[+bug]`` (used by specs,
-    reports, suite tasks, and the golden file alike)."""
-    base = f"{case}@deg{degree}"
+    reports, suite tasks, and the golden file alike).  Per-axis degrees
+    render as ``case@degNxM``."""
+    base = f"{case}@deg{degree_token(degree)}"
     return f"{base}+{bug}" if bug else base
 
 
@@ -80,12 +131,13 @@ class StrategySpec:
     input_names: Tuple[str, ...]
     # -- identity / expectation metadata (stamped by the registry) ----------
     name: str = ""
-    degree: int = 0
+    degree: Degree = 0                   # int, or one entry per mesh axis
     bug: Optional[str] = None
     expected: str = "certificate"        # one of EXPECTATIONS
     description: str = ""
 
     def __post_init__(self):
+        object.__setattr__(self, "degree", normalize_degree(self.degree))
         object.__setattr__(self, "in_specs", tuple(self.in_specs))
         object.__setattr__(self, "avals", tuple(self.avals))
         object.__setattr__(self, "input_names", tuple(self.input_names))

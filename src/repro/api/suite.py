@@ -52,13 +52,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .registry import get_strategy, list_bugs, list_strategies
 from .report import Report
 from .runner import verify
+from .spec import Degree, normalize_degree, parse_degree
 from .spec import task_id as spec_task_id
 
 
 @dataclass(frozen=True)
 class SuiteTask:
     case: str
-    degree: int
+    degree: Degree                       # int, or one entry per mesh axis
     bug: Optional[str] = None
 
     def task_id(self) -> str:
@@ -165,7 +166,12 @@ class Suite:
         self.cases = tuple(cases) if cases is not None else list_strategies()
         for c in self.cases:
             get_strategy(c)              # fail fast on unknown names
-        self.degrees = tuple(degrees) if degrees is not None else None
+        self.degrees = tuple(normalize_degree(d) for d in degrees) \
+            if degrees is not None else None
+        if self.degrees is not None:
+            for c in self.cases:         # fail fast: a tuple degree on a
+                for d in self.degrees:   # single-axis case would abort the
+                    get_strategy(c).validate_degree(d)  # run mid-matrix
         self.include_bugs = include_bugs or bugs is not None
         self.bugs = tuple(bugs) if bugs is not None else None
         if self.bugs:
@@ -334,15 +340,46 @@ class Suite:
 # CLI
 # ---------------------------------------------------------------------------
 
+# The checked-in CI golden: the clean degree-2 matrix's stable summary.
+# ``--check`` diffs against it (make suite / scripts/ci.sh suite);
+# ``--update-golden`` / ``make golden`` regenerates it deterministically.
+DEFAULT_GOLDEN = "tests/golden/suite_degree2.json"
+GOLDEN_DEGREES = (2,)
+
+
+def update_golden(path: str = DEFAULT_GOLDEN, workers: int = 4,
+                  timeout_s: float = 120.0) -> int:
+    """Deterministically regenerate the checked-in golden.
+
+    Certificates are byte-identical for any worker count (covered by
+    ``tests/test_api.py``), so the output depends only on the registered
+    strategies.  A matrix that misses its own expectations is refused —
+    a golden must never encode a failing suite.
+    """
+    with Suite(degrees=GOLDEN_DEGREES) as suite:
+        result = suite.run(workers=workers, timeout_s=timeout_s)
+    if not result.ok:
+        print(f"[suite] REFUSING to write golden: tasks missed their "
+              f"expectation: {result.summary()['not_ok']}", file=sys.stderr)
+        return 1
+    with open(path, "w") as f:
+        json.dump(result.stable_summary(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[suite] regenerated golden {path} "
+          f"({len(result)} tasks)", file=sys.stderr)
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.api",
         description="Run the verification suite matrix in parallel.")
     ap.add_argument("--cases", nargs="*", default=None,
                     help="cases to run (default: every registered strategy)")
-    ap.add_argument("--degrees", nargs="*", type=int, default=None,
-                    help="parallelism degrees (default: per-case registry "
-                         "metadata)")
+    ap.add_argument("--degrees", nargs="*", type=parse_degree, default=None,
+                    help="parallelism degrees — ints like `2 4`, or "
+                         "per-mesh-axis values like `4x2` for 2D cases "
+                         "(default: per-case registry metadata)")
     ap.add_argument("--bugs", action="store_true",
                     help="also run every hosted bug variant")
     ap.add_argument("--workers", type=int, default=4)
@@ -355,7 +392,26 @@ def main(argv=None) -> int:
                          "and fail on mismatch")
     ap.add_argument("--write-golden", default=None, metavar="GOLDEN",
                     help="write the stable summary as the new golden")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="regenerate the checked-in CI golden "
+                         f"({DEFAULT_GOLDEN}) from the canonical clean "
+                         "degree-2 matrix and exit (replaces hand-editing "
+                         "when strategies change; refuses to bake in a "
+                         "failing matrix)")
     args = ap.parse_args(argv)
+
+    if args.update_golden:
+        clash = [flag for flag, v in (
+            ("--cases", args.cases), ("--degrees", args.degrees),
+            ("--bugs", args.bugs or None), ("--json", args.json),
+            ("--markdown", args.markdown), ("--check", args.check),
+            ("--write-golden", args.write_golden)) if v is not None]
+        if clash:
+            ap.error(f"--update-golden regenerates the canonical "
+                     f"{DEFAULT_GOLDEN} matrix and cannot be combined with "
+                     f"{', '.join(clash)} (use --write-golden PATH for a "
+                     f"custom matrix)")
+        return update_golden(workers=args.workers, timeout_s=args.timeout)
 
     suite = Suite(cases=args.cases, degrees=args.degrees,
                   include_bugs=args.bugs)

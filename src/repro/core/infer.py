@@ -280,6 +280,8 @@ class GraphGuard:
                         break
                 ce = self._extract(c_out, leaf_ok)
                 if ce is None:
+                    if self.eg.pending:
+                        continue   # saturation was budget-truncated — resume
                     break
                 before = len(self.related)
                 self._mark_related(ce)

@@ -486,6 +486,56 @@ def _concat_exchange(eg: EGraph, node: ENode, cid: int):
     return eqs
 
 
+def _concat_inject(eg: EGraph, node: ENode, cid: int):
+    """Concat is injective given the split sizes: two concat representations
+    of one class on the same dim with identical piece-size lists have equal
+    corresponding pieces.  This is the shard-replica equality a multi-axis
+    mesh needs: an input sharded on `dp` and replicated on `tp` yields one
+    concat mapping per tp-replica, and only piece-wise equality connects
+    rank (i, 0)'s shard with rank (i, 1)'s."""
+    dim = dict(node.attrs)["dim"]
+    chs = node.children
+    if len(chs) > MAX_FANOUT:
+        return []
+    sizes = [eg.info(c).shape[dim] for c in chs]
+    eqs = []
+    for d2, ys in concat_reps(eg, cid):
+        if d2 != dim or len(ys) != len(chs):
+            continue
+        if [eg.info(y).shape[dim] for y in ys] != sizes:
+            continue
+        for a, b in zip(chs, ys):
+            if eg.find(a) != eg.find(b):
+                eqs.append((a, cls(eg, b)))
+    return eqs
+
+
+def _reduce_add(eg: EGraph, node: ENode, cid: int):
+    """reduce_sum distributes over add — CONSTRAINED (paper §4.3.2): only
+    fires when both per-addend reductions already exist as e-nodes.  This is
+    the reduce/psum exchange a composed 2D mesh needs: it relates the
+    sequential ``sum(y)`` through ``y = psum_tp(yp)`` to the per-rank
+    ``psum_{dp,tp}(sum(yp))`` without generatively splitting every sum."""
+    (cx,) = node.children
+    axes = dict(node.attrs)["axes"]
+    eqs = []
+    for n2 in eg.nodes_of(cx, "add"):
+        ca, cb = n2.children
+        pa = ENode("reduce_sum", (("axes", axes),), (eg.find(ca),))
+        pb = ENode("reduce_sum", (("axes", axes),), (eg.find(cb),))
+        ha, hb = pa in eg.hashcons, pb in eg.hashcons
+        if not (ha or hb):
+            continue
+        # one addend's reduction must pre-exist; the other may be built so
+        # the lemma walks down a psum's nested add chain one level per fire
+        ta = cls(eg, eg.hashcons[pa]) if ha \
+            else reduce_("reduce_sum", cls(eg, ca), axes)
+        tb = cls(eg, eg.hashcons[pb]) if hb \
+            else reduce_("reduce_sum", cls(eg, cb), axes)
+        eqs.append((cid, ew2("add", ta, tb)))
+    return eqs
+
+
 def _slice_cover(eg: EGraph, node: ENode, cid: int):
     """CONSTRAINED lemma (paper §4.3.2): X = concat(X[0:a], X[a:b], ...) only
     when complementary slices already exist as e-nodes. Triggered on slice."""
@@ -892,6 +942,8 @@ LEMMAS: list[Lemma] = [
     Lemma("slice_of_ew", {"slice"}, _slice_of_ew),
     Lemma("concat_merge", {"concat"}, _concat_merge, source="taso"),
     Lemma("concat_exchange", {"concat"}, _concat_exchange, source="taso"),
+    Lemma("concat_inject", {"concat"}, _concat_inject),
+    Lemma("reduce_add", {"reduce_sum"}, _reduce_add),
     Lemma("slice_cover", {"slice"}, _slice_cover),
     Lemma("transpose_alg", {"transpose"}, _transpose_lemmas, source="taso"),
     Lemma("reshape_alg", {"reshape"}, _reshape_lemmas),

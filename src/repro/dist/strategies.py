@@ -1,4 +1,6 @@
-"""Distribution-strategy case suite (paper §6 workloads + §6.2 bug study).
+"""Distribution-strategy case suite (paper §6 workloads + §6.2 bug study,
+plus the FSDP/ZeRO, pipeline-parallel, and 2D-mesh families from the
+bug-study literature in PAPERS.md).
 
 Each builder is registered with ``@register_strategy`` and returns a typed
 :class:`repro.api.StrategySpec` carrying:
@@ -15,8 +17,8 @@ Each builder is registered with ``@register_strategy`` and returns a typed
 plus registry-stamped metadata (case name, degree, bug, expected verdict).
 Specs still unpack as the legacy 6-tuple for older call sites.
 
-``bug=<name>`` injects one of the six real-world bug classes (paper §6.2)
-into the distributed side.  Each bug is declared on its host case as a
+``bug=<name>`` injects one of the ten real-world bug classes (paper §6.2
+plus the FSDP/pipeline/2D-mesh studies) into the distributed side.  Each bug is declared on its host case as a
 ``BugSpec`` whose ``expected`` states how detection surfaces:
 ``refinement_error`` (localized raise) or ``unexpected_relation`` (paper
 bug 5 — a clean but unexpected certificate the user inspects).  The two
@@ -39,7 +41,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..api.registry import register_strategy
-from ..api.spec import BugSpec, StrategySpec
+from ..api.spec import BugSpec, StrategySpec, axis_degrees
 
 
 def _aval(shape):
@@ -337,6 +339,165 @@ def ln_weight_grad(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
         seq_fn, dist_fn, {"sp": degree}, (P("sp", None), P("sp", None)),
         (_aval((seq, d_model)), _aval((seq, d_model))),
         ("dy", "xhat"))
+
+
+# ---------------------------------------------------------------------------
+# fsdp_mlp — ZeRO-3-style fully-sharded MLP (weight gather + grad scatter)
+# ---------------------------------------------------------------------------
+
+@register_strategy(
+    # degree 8 verifies but its 8-wide reduce_scatter add chains take ~20 s
+    # (EXPERIMENTS.md §Gaps) — reachable via --degrees 8, not swept by default
+    "fsdp_mlp", degrees=(2, 4),
+    bugs=[BugSpec("stale_shard", "refinement_error",
+                  "the forward uses the local W1 shard tiled degree times "
+                  "instead of the all_gather — the stale/ungathered "
+                  "parameter class of ZeRO-3 implementations"),
+          BugSpec("rs_wrong_axis", "unexpected_relation",
+                  "the gradient reduce_scatter splits the wrong dimension — "
+                  "no raise, but R_o assembles grad shards along dim 1 "
+                  "instead of dim 0 (paper bug 5 detection mode)")],
+    description="ZeRO-3 FSDP MLP: all_gather weights, reduce_scatter grads")
+def fsdp_mlp_layer(degree: int = 2, bug=None, batch: int = 8,
+                   d_model: int = 8, d_ff: int = 8):
+    """ZeRO-3-style fully-sharded MLP step: every parameter lives sharded on
+    dim 0 across the data-parallel group; the forward all_gathers W1/W2
+    before compute, and the (pseudo-)weight gradient of W2 is
+    reduce_scattered back so each rank keeps exactly its shard's gradient.
+    Outputs: the batch-sharded activation and the rank-local grad shard.
+    Bug `stale_shard`: the forward skips the W1 gather and tiles the local
+    shard — the stale/ungathered parameter class. Bug `rs_wrong_axis`: the
+    reduce_scatter splits dim 1 instead of dim 0 — clean certificate, but
+    R_o concatenates grad shards along the wrong axis (paper bug 5)."""
+    assert batch % degree == 0 and d_model % degree == 0 \
+        and d_ff % degree == 0
+
+    def seq_fn(x, w1, w2):
+        h = jnp.tanh(x @ w1)
+        y = h @ w2
+        gw2 = h.T @ y                 # pseudo-gradient of w2
+        return y, gw2
+
+    def dist_fn(x, w1s, w2s):
+        if bug == "stale_shard":
+            w1 = jnp.concatenate([w1s] * degree, axis=0)   # BUG: no gather
+        else:
+            w1 = jax.lax.all_gather(w1s, "dp", axis=0, tiled=True)
+        w2 = jax.lax.all_gather(w2s, "dp", axis=0, tiled=True)
+        h = jnp.tanh(x @ w1)
+        y = h @ w2
+        gw2_partial = h.T @ y
+        sd = 1 if bug == "rs_wrong_axis" else 0            # BUG: wrong dim
+        gw2s = jax.lax.psum_scatter(gw2_partial, "dp", scatter_dimension=sd,
+                                    tiled=True)
+        return y, gw2s
+
+    return StrategySpec(
+        seq_fn, dist_fn, {"dp": degree},
+        (P("dp", None), P("dp", None), P("dp", None)),
+        (_aval((batch, d_model)), _aval((d_model, d_ff)),
+         _aval((d_ff, d_model))),
+        ("x", "w1", "w2"))
+
+
+# ---------------------------------------------------------------------------
+# pp_stage — pipeline-parallel stage chain with microbatch hand-offs
+# ---------------------------------------------------------------------------
+
+@register_strategy(
+    "pp_stage", degrees=(2, 4),
+    bugs=[BugSpec("drop_microbatch", "refinement_error",
+                  "the hand-off loop feeds microbatch 0 into the last "
+                  "microbatch's slot — one microbatch of work is silently "
+                  "dropped from the schedule")],
+    description="pipeline-parallel stage chain, microbatch ppermute relay")
+def pp_stage_block(degree: int = 2, bug=None, batch: int = 4,
+                   d_model: int = 4, n_micro: int = 2):
+    """GPipe-style pipeline: stage s's weight lives on rank s (the stacked
+    weight tensor is sharded on its leading stage axis), the input is
+    replicated, and each microbatch's activation is relayed rank-to-rank
+    with ``ppermute`` after every stage — so the last rank's accumulated
+    microbatch outputs are exactly the sequential chain, and R_o is the
+    single-rank projection ``y = out@pp{n-1}``. Bug `drop_microbatch`: the
+    relay loop reads microbatch 0 again in the last slot, dropping the
+    final microbatch — the paper bug studies' lost-microbatch schedule
+    class."""
+    assert batch % n_micro == 0
+    mb = batch // n_micro
+    n_stage = degree
+
+    def seq_fn(x, w):
+        h = x
+        for s in range(n_stage):
+            h = jnp.tanh(h @ w[s])
+        return h
+
+    def dist_fn(x, w):
+        wloc = w[0]                   # this rank's stage weight (stage shard)
+        outs = []
+        for m in range(n_micro):
+            src = 0 if (bug == "drop_microbatch" and m == n_micro - 1) \
+                else m                # BUG: last slot re-reads microbatch 0
+            h = jax.lax.dynamic_slice(x, (src * mb, 0), (mb, d_model))
+            for s in range(n_stage):
+                h = jnp.tanh(h @ wloc)
+                if s < n_stage - 1:   # relay activation to the next stage
+                    h = jax.lax.ppermute(
+                        h, "pp", [(i, i + 1) for i in range(n_stage - 1)])
+            outs.append(h)
+        return jnp.concatenate(outs, axis=0)
+
+    return StrategySpec(
+        seq_fn, dist_fn, {"pp": degree},
+        (P(), P("pp", None, None)),
+        (_aval((batch, d_model)), _aval((n_stage, d_model, d_model))),
+        ("x", "w"))
+
+
+# ---------------------------------------------------------------------------
+# tp_dp_2d — composed 2D mesh: Megatron TP x data parallelism
+# ---------------------------------------------------------------------------
+
+@register_strategy(
+    "tp_dp_2d", degrees=((2, 2), (2, 4), (4, 2)),
+    bugs=[BugSpec("psum_wrong_axis", "refinement_error",
+                  "the output all-reduce runs over the dp mesh axis instead "
+                  "of tp — partial sums are combined across batch shards")],
+    description="2D mesh (dp x tp) Megatron MLP, multi-axis psum")
+def tp_dp_2d_mlp(degree=(2, 2), bug=None, seq: int = 4, d_model: int = 8,
+                 d_ff: int = 8):
+    """The Megatron MLP composed with data parallelism on a 2D mesh
+    ``{"dp": d_dp, "tp": d_tp}``: the batch is sharded over dp, W1/W2 are
+    col/row-sharded over tp and replicated over dp. Every input relation is
+    multi-mapping (one concat per replica coordinate on the unused axis),
+    the scalar loss is a *multi-axis* ``psum`` over ``("dp", "tp")``, and
+    the row-parallel output needs the tp-group psum — exercising
+    ``concat_inject`` (shard-replica equality) and ``reduce_add``
+    (reduce/psum exchange). ``degree`` may be an int (both axes) or a
+    per-axis ``(d_dp, d_tp)`` tuple. Bug `psum_wrong_axis`: the output
+    all-reduce runs over dp instead of tp, combining partial sums across
+    batch shards — the composed-mesh wrong-axis collective class."""
+    d_dp, d_tp = axis_degrees(degree, 2)
+    assert seq % d_dp == 0 and d_ff % d_tp == 0
+
+    def seq_fn(x, w1, w2):
+        y = jnp.tanh(x @ w1) @ w2
+        return y, jnp.sum(y)
+
+    def dist_fn(x, w1, w2):
+        h = jnp.tanh(x @ w1)          # x: dp batch shard, w1: tp col shard
+        yp = h @ w2                   # w2: tp row shard -> partial sums
+        axis = "dp" if bug == "psum_wrong_axis" else "tp"   # BUG: wrong axis
+        y = jax.lax.psum(yp, axis)
+        tot = jax.lax.psum(jnp.sum(yp), ("dp", "tp"))       # multi-axis psum
+        return y, tot
+
+    return StrategySpec(
+        seq_fn, dist_fn, {"dp": d_dp, "tp": d_tp},
+        (P("dp", None), P(None, "tp"), P("tp", None)),
+        (_aval((seq, d_model)), _aval((d_model, d_ff)),
+         _aval((d_ff, d_model))),
+        ("x", "w1", "w2"))
 
 
 # ---------------------------------------------------------------------------

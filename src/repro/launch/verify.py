@@ -21,8 +21,8 @@ import argparse
 import json
 import sys
 
-from ..api import (build_spec, get_strategy, list_bugs, list_strategies,
-                   run_spec, verify)
+from ..api import (build_spec, degree_token, get_strategy, list_bugs,
+                   list_strategies, parse_degree, run_spec, verify)
 from ..core import RefinementError
 from ..dist.strategies import STRATEGY_CASES as CASES  # legacy view re-export
 
@@ -47,7 +47,7 @@ def _print_registry():
     for name in list_strategies():
         entry = get_strategy(name)
         bugs = ", ".join(entry.bug_names()) or "-"
-        degs = "/".join(str(d) for d in entry.degrees)
+        degs = "/".join(degree_token(d) for d in entry.degrees)
         print(f"  {name:12s} degrees={degs:8s} expected={entry.expected:12s} "
               f"bugs: {bugs}")
     print("registered bugs (bug -> host case, detection):")
@@ -60,7 +60,8 @@ def main(argv=None):
     ap.add_argument("--case", default="tp_layer", choices=list_strategies())
     ap.add_argument("--bug", default=None, choices=sorted(list_bugs()),
                     help="inject a bug class (must be hosted by --case)")
-    ap.add_argument("--degree", type=int, default=2)
+    ap.add_argument("--degree", type=parse_degree, default=2,
+                    help="int, or per-mesh-axis like `4x2` for 2D cases")
     ap.add_argument("--list", action="store_true",
                     help="print registered cases/bugs and exit")
     ap.add_argument("--json", action="store_true",

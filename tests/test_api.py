@@ -9,8 +9,11 @@ import time
 import pytest
 
 from repro.api import (BugSpec, DuplicateStrategyError, Report, StrategySpec,
-                       Suite, build_spec, bug_host, get_strategy, list_bugs,
-                       list_strategies, register_strategy, verify)
+                       Suite, axis_degrees, build_spec, bug_host,
+                       degree_token, get_strategy, list_bugs,
+                       list_strategies, normalize_degree, parse_degree,
+                       register_strategy, verify)
+from repro.api.spec import task_id
 from repro.api.registry import _REGISTRY
 from repro.api.spec import EXPECTED_VERDICT
 from repro.launch.verify import CASES, run_case
@@ -27,10 +30,15 @@ HAVE_FORK = "fork" in multiprocessing.get_all_start_methods()
 
 def test_registry_covers_paper_matrix():
     assert set(ALL_CASES) == {"tp_layer", "sp_rope", "sp_pad", "ep_moe",
-                              "aux_loss", "sp_moe", "grad_accum", "ln_grad"}
+                              "aux_loss", "sp_moe", "grad_accum", "ln_grad",
+                              "fsdp_mlp", "pp_stage", "tp_dp_2d"}
     assert set(ALL_BUGS) == {"rope_offset", "aux_scale", "pad_slice",
                              "sharded_expert", "grad_accum",
-                             "ln_no_allreduce"}
+                             "ln_no_allreduce", "stale_shard",
+                             "rs_wrong_axis", "drop_microbatch",
+                             "psum_wrong_axis"}
+    # the 2D-mesh case declares per-axis tuple degrees
+    assert get_strategy("tp_dp_2d").degrees == ((2, 2), (2, 4), (4, 2))
 
 
 def test_duplicate_registration_raises():
@@ -105,6 +113,128 @@ def test_spec_iterates_as_legacy_6tuple():
     assert len(tup) == 6
     assert tup[2] == {"ep": 2} and tup[5] == ["x", "w"]
     assert spec.as_tuple()[0] is spec.seq_fn
+
+
+# ---------------------------------------------------------------------------
+# multi-axis degree plumbing
+# ---------------------------------------------------------------------------
+
+def test_degree_normalization_and_tokens():
+    assert normalize_degree(4) == 4
+    assert normalize_degree([2, 4]) == (2, 4)
+    assert normalize_degree((4,)) == 4          # 1-tuple collapses to int
+    assert degree_token(4) == "4"
+    assert degree_token([4, 2]) == "4x2"
+    assert task_id("tp_dp_2d", (2, 4)) == "tp_dp_2d@deg2x4"
+    assert task_id("tp_dp_2d", (2, 4), "psum_wrong_axis") == \
+        "tp_dp_2d@deg2x4+psum_wrong_axis"
+
+
+def test_parse_degree_cli_values():
+    """`--degrees` accepts ints and per-axis `NxM` values (argparse type)."""
+    assert parse_degree("4") == 4
+    assert parse_degree("2x4") == (2, 4)
+    assert parse_degree("2x2x2") == (2, 2, 2)
+    for bad in ("x", "2x", "a", "2xa", "", "0", "-2", "2x0", "2x-1"):
+        with pytest.raises(ValueError, match="bad degree"):
+            parse_degree(bad)
+
+
+def test_tuple_degree_rejected_for_single_axis_cases():
+    """A per-axis tuple on a single-axis case must be a clear error, not an
+    opaque TypeError inside the builder — and the Suite fails fast on it
+    instead of aborting mid-matrix."""
+    with pytest.raises(ValueError, match="single-axis"):
+        build_spec("tp_layer", degree=(2, 4))
+    with pytest.raises(ValueError, match="single-axis"):
+        verify("sp_moe", degree=(2, 2))
+    with pytest.raises(ValueError, match="single-axis"):
+        Suite(degrees=[(2, 4)])
+    with pytest.raises(ValueError, match="2.*-axis degrees"):
+        build_spec("tp_dp_2d", degree=(2, 2, 2))   # wrong arity
+
+
+def test_axis_degrees_broadcast_and_mismatch():
+    assert axis_degrees(4, 2) == (4, 4)         # scalar broadcasts
+    assert axis_degrees((4, 2), 2) == (4, 2)
+    with pytest.raises(ValueError, match="2 entries for a 3-axis"):
+        axis_degrees((4, 2), 3)
+
+
+def test_multiaxis_spec_stamping_and_legacy_tuple():
+    """A 2D-mesh spec carries its per-axis degree (normalized to a tuple)
+    and still unpacks as the legacy 6-tuple."""
+    spec = build_spec("tp_dp_2d", degree=[4, 2])      # list normalizes
+    assert spec.degree == (4, 2)
+    assert spec.task_id() == "tp_dp_2d@deg4x2"
+    seq_fn, dist_fn, axes, specs, avals, names = spec
+    assert callable(seq_fn) and callable(dist_fn)
+    assert axes == {"dp": 4, "tp": 2}
+    assert names == ["x", "w1", "w2"]
+    # scalar degree broadcasts to both mesh axes
+    assert build_spec("tp_dp_2d", degree=2).mesh_axes == {"dp": 2, "tp": 2}
+
+
+def test_multiaxis_report_json_roundtrip():
+    report = verify("tp_dp_2d", degree=(2, 2))
+    assert report.ok and report.degree == (2, 2)
+    back = Report.from_json(json.loads(json.dumps(report.to_json())))
+    assert back.degree == (2, 2)                 # list -> tuple on the way in
+    assert back.task_id() == report.task_id() == "tp_dp_2d@deg2x2"
+
+
+def test_suite_sweeps_tuple_degrees_from_registry():
+    tasks = Suite(cases=["tp_dp_2d"], include_bugs=True).tasks()
+    ids = [t.task_id() for t in tasks]
+    assert ids == ["tp_dp_2d@deg2x2", "tp_dp_2d@deg2x2+psum_wrong_axis",
+                   "tp_dp_2d@deg2x4", "tp_dp_2d@deg2x4+psum_wrong_axis",
+                   "tp_dp_2d@deg4x2", "tp_dp_2d@deg4x2+psum_wrong_axis"]
+
+
+# ---------------------------------------------------------------------------
+# the FSDP / pipeline / 2D-mesh families (bug detection at degree 2 and 4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("degree", [2, 4])
+def test_fsdp_bugs_detected(degree):
+    clean = verify("fsdp_mlp", degree=degree)
+    assert clean.ok and clean.verdict == "certificate"
+    stale = verify("fsdp_mlp", degree=degree, bug="stale_shard")
+    assert stale.ok and stale.verdict == "refinement_error"
+    assert stale.localization["op_name"] == "matmul"
+    # wrong scatter axis: clean certificate, but R_o assembles the grad
+    # shards along dim 1 instead of dim 0 (paper bug 5 detection mode)
+    wrong = verify("fsdp_mlp", degree=degree, bug="rs_wrong_axis")
+    assert wrong.ok and wrong.verdict == "certificate"
+    assert wrong.r_o != clean.r_o
+    (grad_out,) = [k for k, v in wrong.r_o.items() if "dim=1" in v]
+    assert "dim=0" in clean.r_o[grad_out]
+
+
+@pytest.mark.parametrize("degree", [2, 4])
+def test_pp_dropped_microbatch_detected(degree):
+    clean = verify("pp_stage", degree=degree)
+    assert clean.ok and clean.verdict == "certificate"
+    # the whole pipeline's output lives on the last stage's rank
+    assert list(clean.r_o.values())[0].endswith(f"@pp{degree - 1}")
+    bug = verify("pp_stage", degree=degree, bug="drop_microbatch")
+    assert bug.ok and bug.verdict == "refinement_error"
+
+
+def test_tp_dp_2d_wrong_axis_detected():
+    bug = verify("tp_dp_2d", degree=(2, 2), bug="psum_wrong_axis")
+    assert bug.ok and bug.verdict == "refinement_error"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("degree", [(2, 4), (4, 2)])
+def test_tp_dp_2d_degree4_axes(degree):
+    """Degree 4 on either mesh axis certifies and catches the wrong-axis
+    psum ((4, 4) is a documented scale gap — see EXPERIMENTS.md)."""
+    clean = verify("tp_dp_2d", degree=degree)
+    assert clean.ok and clean.verdict == "certificate"
+    bug = verify("tp_dp_2d", degree=degree, bug="psum_wrong_axis")
+    assert bug.ok and bug.verdict == "refinement_error"
 
 
 # ---------------------------------------------------------------------------
