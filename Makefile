@@ -3,7 +3,8 @@
 PY ?= python
 PYTEST ?= $(PY) -m pytest
 
-.PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden
+.PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden \
+	modelcheck-smoke
 
 # tier-1 gate: full test suite
 verify:
@@ -40,3 +41,11 @@ suite:
 # (refuses to bake in a failing matrix)
 golden:
 	PYTHONPATH=src $(PY) -m repro.api --update-golden --workers 4
+
+# whole-model verification smoke: gpt at dp2xtp2 must emit a clean
+# whole-model certificate (block-by-block with obligation dedup), and the
+# injected per-layer spec bug must be localized to the offending block
+modelcheck-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.verify --model gpt --plan dp2xtp2
+	PYTHONPATH=src $(PY) -m repro.launch.verify --model gpt --plan dp2xtp2 \
+		--inject-bug wrong_spec --bug-layer 3; test $$? -eq 1

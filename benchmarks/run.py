@@ -132,6 +132,44 @@ def fam_scaling(rows, out, repeats=None):
                          rec["egraph_nodes"]))
 
 
+def modelcheck_bench(rows, out, repeats=None):
+    """Whole-model verification (repro.modelcheck): wall/infer time plus
+    unique-obligations vs total-blocks (the dedup ratio is the scale
+    story — e.g. kimi's 63 blocks cost 3 verifications).  The case list is
+    identical in smoke and full runs so the bench gate
+    (scripts/check_bench.py) can require every baseline case."""
+    import statistics as _st
+
+    from repro.modelcheck import check_model
+    repeats = repeats or REPEATS
+    sec = out.setdefault("modelcheck", {})
+    cases = [("gpt", "dp2xtp2"), ("gpt", "dp2"),
+             ("gemma3-12b", "dp2xtp2"), ("mixtral-8x7b", "tp2")]
+    for model, plan in cases:
+        def one():
+            rep = check_model(model, plan, workers=0)
+            assert rep.verdict == "certificate", \
+                f"{model}@{plan}: {rep.verdict} (blocks {rep.failing_blocks})"
+            return rep
+        one()                                          # warmup
+        walls, infers, rep = [], [], None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            rep = one()
+            walls.append((time.perf_counter() - t0) * 1e3)
+            infers.append(rep.timing()["infer_s_sum"] * 1e3)
+        key = f"{model}@{plan}"
+        sec[key] = {
+            "wall_ms": round(_st.median(walls), 3),
+            "infer_ms": round(_st.median(infers), 3),
+            "total_blocks": rep.total_blocks,
+            "unique_obligations": rep.unique_obligations,
+            "dedup_ratio": rep.dedup_ratio,
+        }
+        rows.append((f"modelcheck/{key}", sec[key]["wall_ms"] * 1e3,
+                     rep.unique_obligations))
+
+
 def suite_runner(rows, out, repeats=None):
     """Suite process-pool runner vs sequential run_case looping.
 
@@ -316,8 +354,9 @@ def main(argv=None) -> None:
     sections = [
         lambda: fig4_verification_time(rows, out, repeats),
         lambda: fig5_scaling(rows, out, repeats),
+        lambda: modelcheck_bench(rows, out, repeats),
     ]
-    names = ["fig4_verification_time", "fig5_scaling"]
+    names = ["fig4_verification_time", "fig5_scaling", "modelcheck_bench"]
     if not args.smoke:
         sections += [
             lambda: fam_scaling(rows, out, repeats),

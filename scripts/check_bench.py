@@ -21,8 +21,10 @@ import json
 import os
 import sys
 
-# the sections a --smoke run produces; both carry the hot-path metric
-SMOKE_SECTIONS = ("fig4", "fig5")
+# the sections a --smoke run produces; all carry the hot-path metric
+# (modelcheck's infer_ms is the summed relation-inference time over the
+# model's unique obligations — the whole-model hot path after dedup)
+SMOKE_SECTIONS = ("fig4", "fig5", "modelcheck")
 METRIC = "infer_ms"
 
 
@@ -48,9 +50,12 @@ def main(argv=None) -> int:
                     default=float(os.environ.get("BENCH_TOLERANCE", "1.5")),
                     help="allowed slowdown factor (default 1.5, or "
                          "$BENCH_TOLERANCE)")
-    ap.add_argument("--min-ms", type=float, default=1.0,
+    ap.add_argument("--min-ms", type=float, default=5.0,
                     help="noise floor: baselines below this compare "
-                         "against min-ms instead (default 1.0)")
+                         "against min-ms instead (default 5.0 — the "
+                         "millisecond fig4 cases flap 2-3x under "
+                         "container scheduler noise; the heavyweight "
+                         "sections carry the real regression signal)")
     args = ap.parse_args(argv)
     if args.tolerance <= 0:
         ap.error("--tolerance must be positive")

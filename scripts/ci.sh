@@ -20,6 +20,20 @@ case "$target" in
   # deterministically regenerate tests/golden/*.json after a strategy change
   golden)      PYTHONPATH=src python -m repro.api --update-golden \
                  --workers 4 ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden)" >&2
+  # whole-model smoke: gpt@dp2xtp2 certifies; injected bug localizes.
+  # rc must be exactly 1 (bug detected AND localized to its block) — rc 2
+  # means a harness problem (mis-localization / crash), which must fail.
+  modelcheck-smoke)
+               PYTHONPATH=src python -m repro.launch.verify \
+                 --model gpt --plan dp2xtp2
+               rc=0
+               PYTHONPATH=src python -m repro.launch.verify \
+                 --model gpt --plan dp2xtp2 --inject-bug wrong_spec \
+                 --bug-layer 3 || rc=$?
+               if [ "$rc" -ne 1 ]; then
+                 echo "injected bug not localized (rc=$rc, want 1)" >&2
+                 exit 1
+               fi ;;
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke)" >&2
      exit 2 ;;
 esac

@@ -192,3 +192,33 @@ def build_spec(name: str, *, degree: Degree = 2, bug: Optional[str] = None,
     is hosted by a different case (the wrong-host guard).
     """
     return get_strategy(name).builder(degree=degree, bug=bug, **kw)
+
+
+# ---------------------------------------------------------------------------
+# model-level tasks (repro.modelcheck)
+# ---------------------------------------------------------------------------
+# Whole-model verification tasks live beside the strategy registry under
+# ``model@plan`` ids (e.g. ``gpt@dp2xtp2``).  They are resolved lazily so
+# importing ``repro.api`` does not pull the model zoo in.
+
+def list_model_tasks() -> Tuple[str, ...]:
+    """``model@plan`` ids: every decomposable model x default mesh plan."""
+    from ..modelcheck import supported_models
+    from ..sharding.specs import DEFAULT_PLANS
+    return tuple(f"{m}@{p}" for m in supported_models()
+                 for p in DEFAULT_PLANS)
+
+
+def check_model_task(task: str, **kw):
+    """Run one ``model@plan`` whole-model task -> ``ModelReport``.
+
+    Keyword arguments pass through to
+    :func:`repro.modelcheck.check_model` (``bug=``, ``bug_layer=``,
+    ``workers=``, ``engine_opts=``, ...).
+    """
+    model, sep, plan = str(task).partition("@")
+    if not sep or not model or not plan:
+        raise KeyError(f"bad model task `{task}` — expected `model@plan` "
+                       f"like `gpt@dp2xtp2`")
+    from ..modelcheck import check_model
+    return check_model(model, plan, **kw)

@@ -6,8 +6,8 @@ Public API:
     Certificate, RefinementError         — results
     register_lemma                       — user lemma extension point
 """
-from .capture import (Graph, CaptureError, capture, capture_spmd,
-                      expand_spmd, derive_input_relation)
+from .capture import (Graph, CaptureError, capture, capture_chain,
+                      capture_spmd, expand_spmd, derive_input_relation)
 from .egraph import EGraph, Lemma, EGraphLimit, EGraphShapeError
 from .infer import Certificate, GraphGuard, RefinementError, check_refinement
 from .lemmas import all_lemmas, register_lemma
@@ -16,7 +16,8 @@ from .symbolic import AffExpr, ScalarSolver, NonAffine
 from . import terms
 
 __all__ = [
-    "Graph", "CaptureError", "capture", "capture_spmd", "expand_spmd",
+    "Graph", "CaptureError", "capture", "capture_chain", "capture_spmd",
+    "expand_spmd",
     "derive_input_relation", "EGraph", "Lemma", "EGraphLimit",
     "EGraphShapeError", "Certificate", "GraphGuard", "RefinementError",
     "check_refinement", "all_lemmas", "register_lemma", "AffExpr",

@@ -139,6 +139,36 @@ def capture(fn: Callable, avals: Sequence, names: Sequence[str],
     return _jaxpr_to_graph(closed, list(names), graph_tag)
 
 
+def capture_chain(stages, init_avals, init_names):
+    """Capture a *named-block sequence* instead of one opaque jaxpr.
+
+    ``stages`` is a list of ``(name, fn, extra_avals, extra_names)``; stage
+    *k* is traced as ``fn(*carry, *extras)`` where ``carry`` is the previous
+    stage's output avals (the model activations flowing block to block) and
+    ``extras`` are the stage's own parameters.  Carried tensors are named
+    ``{stage}.out{j}`` and parameters ``{stage}.{param}``, so graph *k+1*'s
+    input names are exactly graph *k*'s output names — the seam contract
+    ``repro.modelcheck`` verifies per block.
+
+    Returns ``(graphs, carry_avals, carry_names)`` where ``graphs`` is the
+    ordered ``[(stage name, Graph)]`` list and the carry reflects the final
+    stage's outputs.
+    """
+    carry_avals = list(init_avals)
+    carry_names = list(init_names)
+    graphs = []
+    for name, fn, extra_avals, extra_names in stages:
+        avals = carry_avals + list(extra_avals)
+        names = carry_names + [f"{name}.{n}" for n in extra_names]
+        g = capture(fn, avals, names)
+        out_shape = jax.eval_shape(fn, *avals)
+        leaves = jax.tree_util.tree_leaves(out_shape)
+        carry_avals = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+        carry_names = [f"{name}.out{j}" for j in range(len(leaves))]
+        graphs.append((name, g))
+    return graphs, carry_avals, carry_names
+
+
 @dataclass
 class SpmdCapture:
     graph: Graph                  # per-rank program with collective ops

@@ -536,6 +536,93 @@ def _reduce_add(eg: EGraph, node: ENode, cid: int):
     return eqs
 
 
+def _reduce_reshape(eg: EGraph, node: ENode, cid: int):
+    """Reduction across a reshape boundary: when the reduced axes of
+    ``reduce(reshape(x, s'), axes)`` cover *complete* segments of the
+    reshape's greedy factorization (see ``_segments``), the reduction
+    commutes with the reshape —
+
+        reduce_sum(reshape(x, (-1,)), (0,)) = reduce_sum(x, (0, 1))
+
+    This is the aux-loss pattern: G_s sums a flattened view while G_d
+    reduces both axes of the local shard at once (EXPERIMENTS.md used to
+    carry it as a documented completeness gap)."""
+    op = node.op
+    (cx,) = node.children
+    axes = set(dict(node.attrs)["axes"])
+    new_shape = eg.info(cx).shape
+    eqs = []
+    for n2 in eg.nodes_of(cx, "reshape"):
+        cb = n2.children[0]
+        old_shape = eg.info(cb).shape
+        segs = _segments(old_shape, new_shape)
+        if segs is None:
+            continue
+        base_axes, ok = [], True
+        for old_axes, new_axes in segs:
+            hit = [a for a in new_axes if a in axes]
+            if not hit:
+                continue
+            if len(hit) != len(new_axes):  # partially-reduced segment
+                ok = False
+                break
+            base_axes.extend(old_axes)
+        if not ok or not base_axes:
+            continue
+        inner = reduce_(op, cls(eg, cb), tuple(sorted(base_axes)))
+        out_shape = tuple(d for i, d in enumerate(new_shape) if i not in axes)
+        eqs.append((cid, inner if inner.shape == out_shape
+                    else reshape(inner, out_shape)))
+    return eqs
+
+
+def _scalar_factor(eg: EGraph, node: ENode, cid: int):
+    """Constant scalar factors distribute over ``add`` (and therefore over a
+    psum's expanded cross-rank add chain):
+
+        div(add(a, b), c) = add(div(a, c), div(b, c))
+        mul(add(a, b), c) = add(mul(a, c), mul(b, c))
+
+    for a literal (or broadcast-literal) ``c`` — the converse direction of
+    ``add_div_dist``, triggered on the mul/div side so a sequential
+    ``psum(x) / n`` can chase the per-rank ``x / n`` pieces.
+
+    CONSTRAINED (paper §4.3.2): one addend's scaled node must already exist
+    in the e-graph; the other may be built, so the lemma walks down a psum's
+    nested add chain one level per fire instead of generatively scaling
+    every add in sight (unconstrained, it blows up the 8-rank chains)."""
+    op = node.op
+    ca, cb = node.children
+    eqs = []
+    for left, right in ((ca, cb), (cb, ca)):
+        v = _lit_of(eg, right)
+        if v is None or v == 0:
+            continue
+        if op == "div" and left is not ca:
+            continue                     # only x/c distributes, not c/x
+        cr = eg.find(right)
+        for n2 in eg.nodes_of(left, "add"):
+            c1, c2 = n2.children
+            probes = {}
+            for ch in (c1, c2):
+                hit = None
+                for order in (((eg.find(ch), cr)), ((cr, eg.find(ch)))):
+                    pn = ENode(op, (), order)
+                    if pn in eg.hashcons:
+                        hit = eg.hashcons[pn]
+                        break
+                    if op == "div":      # div is not commutative
+                        break
+                probes[ch] = hit
+            if all(h is None for h in probes.values()):
+                continue
+            terms = [cls(eg, probes[ch]) if probes[ch] is not None
+                     else ew2(op, cls(eg, ch), cls(eg, right))
+                     for ch in (c1, c2)]
+            eqs.append((cid, ew2("add", terms[0], terms[1])))
+    return eqs
+
+
 def _slice_cover(eg: EGraph, node: ENode, cid: int):
     """CONSTRAINED lemma (paper §4.3.2): X = concat(X[0:a], X[a:b], ...) only
     when complementary slices already exist as e-nodes. Triggered on slice."""
@@ -937,6 +1024,9 @@ LEMMAS: list[Lemma] = [
     Lemma("reduce_concat", REDUCE_OPS, _reduce_concat),
     Lemma("reduce_broadcast", {"reduce_sum"}, _reduce_broadcast),
     Lemma("reduce_trivial", REDUCE_OPS, _reduce_trivial),
+    Lemma("reduce_reshape", {"reduce_sum", "reduce_max", "reduce_min"},
+          _reduce_reshape),
+    Lemma("scalar_factor", {"mul", "div"}, _scalar_factor),
     Lemma("slice_of_concat", {"slice"}, _slice_of_concat, source="taso"),
     Lemma("slice_of_slice", {"slice"}, _slice_of_slice, source="taso"),
     Lemma("slice_of_ew", {"slice"}, _slice_of_ew),

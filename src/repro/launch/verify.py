@@ -1,19 +1,23 @@
 """GraphGuard pre-launch verification CLI (thin shim over ``repro.api``).
 
+Single-layer strategy cases (the paper-§6 matrix):
+
     python -m repro.launch.verify --case tp_layer [--bug rope_offset] \
         [--degree 2] [--json] [--list]
 
-Captures the sequential layer and its shard_map distributed implementation,
-derives R_i from the PartitionSpecs, runs iterative relation inference, and
-prints the certificate R_o (or the localized bug report).
+Whole-model verification (the ``repro.modelcheck`` subsystem — block-by-
+block decomposition with obligation dedup):
+
+    python -m repro.launch.verify --model gpt --plan dp2xtp2 \
+        [--inject-bug wrong_spec [--bug-layer 3]] [--workers 4] [--json]
 
 The case matrix lives in the ``repro.api`` registry (populated by
-``repro.dist.strategies`` and any third-party ``@register_strategy``
-call sites) — this module keeps the historical ``run_case``/``CASES``
-surface and CLI output stable on top of it.  ``--list`` prints the
-registered cases and bugs; ``--json`` emits the structured
-``repro.api.Report`` instead of the human-readable text.  For matrix runs
-use the suite runner: ``python -m repro.api``.
+``repro.dist.strategies``); model-level tasks resolve through
+``repro.modelcheck``.  ``--list`` prints both.  ``--json`` emits the
+structured report (a ``repro.api.Report`` or ``ModelReport``) wrapped in a
+stable envelope carrying ``schema_version`` and per-phase ``timing`` stats
+so downstream tooling can gate on it.  For matrix runs use the suite
+runner: ``python -m repro.api``.
 """
 from __future__ import annotations
 
@@ -22,9 +26,13 @@ import json
 import sys
 
 from ..api import (build_spec, degree_token, get_strategy, list_bugs,
-                   list_strategies, parse_degree, run_spec, verify)
+                   list_model_tasks, list_strategies, parse_degree, run_spec,
+                   verify)
 from ..core import RefinementError
 from ..dist.strategies import STRATEGY_CASES as CASES  # legacy view re-export
+
+# the --json envelope: {"schema_version", "kind", "timing", "report"}
+JSON_SCHEMA_VERSION = 2
 
 
 def run_case(case: str, bug=None, degree: int = 2, max_nodes=400_000,
@@ -53,26 +61,109 @@ def _print_registry():
     print("registered bugs (bug -> host case, detection):")
     for bug, (host, bspec) in sorted(list_bugs().items()):
         print(f"  {bug:16s} -> {host:12s} ({bspec.expected})")
+    print("model-level tasks (repro.modelcheck; --model M --plan P):")
+    for task in list_model_tasks():
+        print(f"  {task}")
+
+
+def _json_envelope(kind: str, report_json: dict, timing: dict) -> str:
+    return json.dumps({
+        "schema_version": JSON_SCHEMA_VERSION,
+        "kind": kind,
+        "timing": timing,
+        "report": report_json,
+    }, indent=2, sort_keys=True)
+
+
+def _case_timing(report) -> dict:
+    stats = report.stats or {}
+    return {
+        "wall_s": report.wall_s,
+        "infer_s": stats.get("time_s", 0.0),
+        "phase_s": dict(stats.get("phase_s") or {}),
+    }
+
+
+def _run_model(args) -> int:
+    from ..modelcheck import ModelCheckError, check_model
+    try:
+        report = check_model(args.model, args.plan, bug=args.inject_bug,
+                             bug_layer=args.bug_layer, workers=args.workers)
+    except (ModelCheckError, ValueError) as e:
+        print(f"[modelcheck] {e}", file=sys.stderr)
+        return 2
+    if args.json:
+        print(_json_envelope("model", report.to_json(), report.timing()))
+    else:
+        print(report.to_markdown())
+        if report.verdict == "certificate":
+            print("WHOLE-MODEL REFINEMENT HOLDS "
+                  f"({report.unique_obligations} obligations verified for "
+                  f"{report.total_blocks} blocks, "
+                  f"dedup {report.dedup_ratio:.1f}x)")
+        else:
+            print(f"WHOLE-MODEL VERDICT: {report.verdict} — failing "
+                  f"blocks {report.failing_blocks}")
+    # exit codes: 0 clean certificate; 1 expected failure (an injected bug
+    # detected AND localized to its block — report.ok encodes that); 2 a
+    # harness problem (clean run not ok, or a bug run failing in the wrong
+    # block), so CI gates that assert rc==1 catch mis-localization.
+    if args.inject_bug is not None:
+        if not report.ok:
+            print(f"[modelcheck] injected bug NOT correctly localized "
+                  f"(expected block {1 + (report.bug_layer or 0)}, failing "
+                  f"blocks {report.failing_blocks})", file=sys.stderr)
+            return 2
+        return 1
+    return 0 if report.ok else 1
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--case", default="tp_layer", choices=list_strategies())
+    ap.add_argument("--case", default=None, choices=list_strategies(),
+                    help="single-layer strategy case (default: tp_layer "
+                         "unless --model is given)")
     ap.add_argument("--bug", default=None, choices=sorted(list_bugs()),
                     help="inject a bug class (must be hosted by --case)")
     ap.add_argument("--degree", type=parse_degree, default=2,
                     help="int, or per-mesh-axis like `4x2` for 2D cases")
+    ap.add_argument("--model", default=None,
+                    help="whole-model verification: a model id like `gpt` "
+                         "(see --list)")
+    ap.add_argument("--plan", default="dp2xtp2",
+                    help="mesh plan for --model, e.g. dp2 / tp2 / dp2xtp2")
+    ap.add_argument("--inject-bug", default=None, choices=("wrong_spec",),
+                    help="inject a whole-model bug into one layer")
+    ap.add_argument("--bug-layer", type=int, default=None,
+                    help="layer index for --inject-bug (default: middle)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool size for --model (default: auto)")
     ap.add_argument("--list", action="store_true",
-                    help="print registered cases/bugs and exit")
+                    help="print registered cases/bugs/model tasks and exit")
     ap.add_argument("--json", action="store_true",
-                    help="emit the structured Report as JSON")
+                    help="emit the structured report as JSON (with "
+                         "schema_version + per-phase timing)")
     args = ap.parse_args(argv)
     if args.list:
         _print_registry()
         return
+    if args.model is not None:
+        if args.case is not None or args.bug is not None:
+            ap.error("--model/--plan and --case/--bug are separate paths")
+        rc = _run_model(args)
+        if rc:
+            sys.exit(rc)
+        return
+    if args.inject_bug is not None or args.bug_layer is not None \
+            or args.workers is not None:
+        ap.error("--inject-bug/--bug-layer/--workers require --model "
+                 "(the case path takes --bug)")
+    if args.case is None:
+        args.case = "tp_layer"
     if args.json:
         report = verify(args.case, degree=args.degree, bug=args.bug)
-        print(json.dumps(report.to_json(), indent=2, sort_keys=True))
+        print(_json_envelope("case", report.to_json(),
+                             _case_timing(report)))
         if report.verdict != "certificate":
             sys.exit(1)
         return

@@ -1,0 +1,203 @@
+"""Scheduler: fan unique obligations across the Suite worker pool model.
+
+``check_model`` is the subsystem entry point.  Unique obligations (after
+dedup) are verified either in-process or on a fork/spawn process pool with
+the same warmed-worker discipline as :class:`repro.api.Suite` — workers
+receive only picklable ``(model id, plan name, bug, bug_layer, key)``
+tuples and rebuild the obligation from the deterministic decomposition,
+so nothing unpicklable crosses the boundary and certificates stay
+byte-identical for any worker count.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from typing import Dict, Optional, Tuple, Union
+
+from ..api.report import Report
+from ..api.runner import _engine_opts
+from ..core import (RefinementError, capture, capture_spmd, check_refinement,
+                    expand_spmd)
+from ..core.terms import pretty
+from ..models.config import ModelConfig
+from ..models.registry import load_config
+from ..sharding.specs import MeshPlan
+from .decompose import Decomposition, decompose, list_model_ids
+from .obligations import Obligation
+from .report import ModelReport
+from .stitch import expected_output_relation, stitch
+
+DEFAULT_TIMEOUT_S = 600.0
+
+
+def _expected_for(ob: Obligation) -> str:
+    return ("refinement_error"
+            if dict(ob.structure).get("bug", "-") != "-" else "certificate")
+
+
+def _verify_obligation(ob: Obligation, name: str, expected: str,
+                       engine_opts: Optional[dict] = None) -> dict:
+    """Verify one obligation; returns a JSON-ready nested Report dict with
+    the seam check (inferred R_o vs spec-promised relation) attached."""
+    spec = ob.to_strategy_spec(
+        name=name, expected=expected,
+        bug=None if expected == "certificate" else "wrong_spec")
+    t0 = time.perf_counter()
+    try:
+        with _engine_opts(engine_opts) as eo:
+            gs = capture(spec.seq_fn, list(spec.avals),
+                         list(spec.input_names))
+            cap = capture_spmd(spec.dist_fn, spec.mesh_axes,
+                               list(spec.in_specs), list(spec.avals),
+                               list(spec.input_names))
+            gd, r_i = expand_spmd(cap)
+            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+    except RefinementError as e:
+        return Report(
+            case=name, degree=spec.degree, bug=spec.bug,
+            verdict="refinement_error", expected=expected,
+            ok=expected == "refinement_error", localization=e.payload(),
+            wall_s=round(time.perf_counter() - t0, 6)).to_json()
+    except Exception as e:  # noqa: BLE001 — capture/engine failure -> verdict
+        return Report(
+            case=name, degree=spec.degree, bug=spec.bug,
+            verdict="error", expected=expected, ok=False,
+            error=f"{type(e).__name__}: {e}",
+            wall_s=round(time.perf_counter() - t0, 6)).to_json()
+
+    # seam check: each distributed output must assemble exactly as its
+    # output PartitionSpec promises the next block's input relation
+    n_ranks = 1
+    for _, s in ob.mesh_axes:
+        n_ranks *= s
+    seams, seams_ok = [], True
+    for j, (out_name, ospec) in enumerate(zip(gs.outputs, ob.out_specs)):
+        gd_out = gd.outputs[j * n_ranks]
+        base = gd_out.split("@")[0]
+        expect = expected_output_relation(
+            base, gd.shapes[gd_out], gd.dtypes[gd_out], ospec,
+            dict(ob.mesh_axes))
+        got = cert.r_o.get(out_name)
+        ok = got is expect               # Terms are hash-consed: identity
+        seams_ok &= ok
+        seams.append({"output": out_name, "ok": ok,
+                      "expected": pretty(expect, 999),
+                      "got": None if got is None else pretty(got, 999)})
+    cert_json = cert.to_json()
+    d = Report(
+        case=name, degree=spec.degree, bug=spec.bug,
+        verdict="certificate", expected=expected,
+        ok=expected == "certificate" and seams_ok,
+        r_o=cert_json["r_o"], stats=cert_json["stats"],
+        wall_s=round(time.perf_counter() - t0, 6)).to_json()
+    d["seams"] = seams
+    return d
+
+
+def _task_name(dec: Decomposition, key: str) -> str:
+    return f"{dec.model}:{dec.plan.name}:{key}"
+
+
+def _pool_task(model: str, plan: str, bug: Optional[str],
+               bug_layer: Optional[int], key: str,
+               engine_opts: Optional[dict]) -> Tuple[str, dict]:
+    """Pool worker: rebuild the (deterministic) decomposition and verify
+    the obligation addressed by ``key``."""
+    dec = decompose(model, plan, bug=bug, bug_layer=bug_layer)
+    ob = dec.obset.unique[key]
+    return key, _verify_obligation(ob, _task_name(dec, key),
+                                   _expected_for(ob), engine_opts)
+
+
+def _poolable(dec: Decomposition) -> bool:
+    """Workers rebuild by model id — only stock configs round-trip."""
+    return (dec.model in list_model_ids()
+            and load_config(dec.model) == dec.cfg)
+
+
+def run_obligations(dec: Decomposition, workers: Optional[int] = None,
+                    engine_opts: Optional[dict] = None,
+                    timeout_s: float = DEFAULT_TIMEOUT_S
+                    ) -> Tuple[Dict[str, dict], int]:
+    """Verify the decomposition's unique obligations; returns
+    ``({key: report dict}, workers actually used)``."""
+    keys = dec.obset.keys_in_order()
+    if workers is None:
+        # auto: dedup usually leaves a single model with 3-4 sub-second
+        # obligations — in-process beats paying pool spin-up; fan out only
+        # when there is genuinely parallel work
+        workers = min(4, len(keys)) if len(keys) > 4 else 1
+    if workers >= 2 and not _poolable(dec):
+        workers = 1
+    reports: Dict[str, dict] = {}
+    if workers < 2:
+        for key in keys:
+            ob = dec.obset.unique[key]
+            reports[key] = _verify_obligation(
+                ob, _task_name(dec, key), _expected_for(ob), engine_opts)
+        return reports, 1
+
+    import multiprocessing
+
+    from ..api.suite import _warm_worker
+    # spawn, not fork: by the time a whole-model check runs, the parent
+    # process has usually executed jax/pallas work and forking its
+    # multithreaded state can deadlock the child mid-trace.  Obligations
+    # are second-granularity (unlike the Suite's millisecond strategy
+    # tasks), so the per-worker interpreter spin-up amortizes.
+    ctx = multiprocessing.get_context("spawn")
+    pool = ProcessPoolExecutor(max_workers=min(workers, len(keys)),
+                               mp_context=ctx, initializer=_warm_worker)
+    try:
+        futs = {key: pool.submit(_pool_task, dec.model, dec.plan.name,
+                                 dec.bug, dec.bug_layer, key, engine_opts)
+                for key in keys}
+        deadline = time.monotonic() + timeout_s
+        for key, fut in futs.items():
+            ob = dec.obset.unique[key]
+            try:
+                _, reports[key] = fut.result(
+                    timeout=max(deadline - time.monotonic(), 0.001))
+            except FutureTimeoutError:
+                fut.cancel()
+                reports[key] = Report(
+                    case=_task_name(dec, key),
+                    degree=tuple(s for _, s in ob.mesh_axes), bug=None,
+                    verdict="timeout", expected=_expected_for(ob), ok=False,
+                    error=f"exceeded model-check budget of {timeout_s}s",
+                    wall_s=timeout_s).to_json()
+            except Exception:  # noqa: BLE001 — broken/crashed worker:
+                # fork-after-jax is flaky under heavy parent state, and the
+                # obligation count is small — fall back to verifying this
+                # obligation in-process rather than degrading the verdict
+                reports[key] = _verify_obligation(
+                    ob, _task_name(dec, key), _expected_for(ob),
+                    engine_opts)
+    finally:
+        procs = list(getattr(pool, "_processes", {}).values())
+        pool.shutdown(wait=False, cancel_futures=True)
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+    return reports, min(workers, len(keys))
+
+
+def check_model(model: Union[str, ModelConfig], plan: Union[str, MeshPlan],
+                *, bug: Optional[str] = None,
+                bug_layer: Optional[int] = None,
+                workers: Optional[int] = None,
+                engine_opts: Optional[dict] = None,
+                timeout_s: float = DEFAULT_TIMEOUT_S) -> ModelReport:
+    """Whole-model refinement check: decompose, dedup, verify, stitch.
+
+    Returns a :class:`ModelReport`; never raises on verification failures
+    (they become block verdicts) — only on caller mistakes (unknown model /
+    plan / bug).
+    """
+    t0 = time.perf_counter()
+    dec = decompose(model, plan, bug=bug, bug_layer=bug_layer)
+    reports, used = run_obligations(dec, workers=workers,
+                                    engine_opts=engine_opts,
+                                    timeout_s=timeout_s)
+    return stitch(dec, reports, time.perf_counter() - t0, used)

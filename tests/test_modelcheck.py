@@ -1,0 +1,271 @@
+"""repro.modelcheck: whole-model verification, obligation dedup, stitching.
+
+Covers the subsystem contract end to end: decomposition shape, the dedup
+cache (layer-count invariance + byte-identical certificates on cache
+hits), seam checking, whole-model certificates, injected-bug localization
+to the offending block, scheduler determinism across worker counts, the
+model-task registry entries, and the CLI envelope.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.api import check_model_task, list_model_tasks
+from repro.core import capture_chain
+from repro.models.registry import load_config
+from repro.modelcheck import (ModelCheckError, ObligationSet, check_model,
+                              decompose, expected_output_relation,
+                              supported_models)
+from repro.modelcheck.blocks import layer_obligation
+from repro.sharding.specs import DEFAULT_PLANS, parse_plan
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+def test_parse_plan():
+    plan = parse_plan("dp2xtp2")
+    assert plan.mesh_axes == {"dp": 2, "tp": 2}
+    assert plan.degree == (2, 2)
+    assert parse_plan("dp4").mesh_axes == {"dp": 4}
+    with pytest.raises(ValueError):
+        parse_plan("dp1")            # size-1 axis: drop it instead
+    with pytest.raises(ValueError):
+        parse_plan("zz2")            # unknown axis
+    with pytest.raises(ValueError):
+        parse_plan("dp2xdp2")        # duplicate axis
+
+
+def test_plan_rules_drive_specs():
+    plan = parse_plan("dp2xtp2")
+    assert tuple(plan.spec_for(("batch", "seq", "embed"))) == \
+        ("dp", None, None)
+    assert tuple(plan.spec_for(("embed", "heads"))) == (None, "tp")
+    # a dp-only plan leaves tensor dims unsharded
+    assert set(parse_plan("dp2").spec_for(("embed", "heads"))) <= {None}
+
+
+# ---------------------------------------------------------------------------
+# decomposition + dedup
+# ---------------------------------------------------------------------------
+
+def test_decompose_gpt_block_structure():
+    dec = decompose("gpt", "dp2xtp2")
+    names = [n for n, _ in dec.obset.blocks]
+    assert names[0] == "embed" and names[-1] == "head"
+    assert len(names) == load_config("gpt").n_layers + 2
+    # 12 identical layers + embed + head -> exactly 3 unique obligations
+    assert dec.n_unique == 3
+    assert dec.dedup_ratio == pytest.approx(14 / 3)
+
+
+def test_dedup_is_layer_count_invariant():
+    """Two configs differing ONLY in n_layers must produce the same
+    unique-obligation key set (the satellite acceptance)."""
+    cfg = load_config("gpt")
+    small = dataclasses.replace(cfg, n_layers=2)
+    big = dataclasses.replace(cfg, n_layers=9)
+    k_small = set(decompose(small, "dp2xtp2").obset.unique)
+    k_big = set(decompose(big, "dp2xtp2").obset.unique)
+    assert k_small == k_big
+    assert decompose(big, "dp2xtp2").total_blocks == 11
+
+
+def test_pattern_roles_split_obligations():
+    """gemma3's 5:1 local:global pattern yields two distinct layer
+    obligations — the dedup key sees the mask structure, not the index."""
+    dec = decompose("gemma3-12b", "dp2")
+    kinds = {}
+    for _, key in dec.obset.blocks:
+        kinds.setdefault(key, 0)
+        kinds[key] += 1
+    layer_keys = [k for k in kinds if k.startswith("block-")]
+    assert len(layer_keys) == 2          # local + global
+    assert sorted(kinds[k] for k in layer_keys) == [
+        load_config("gemma3-12b").n_layers // 6,
+        5 * load_config("gemma3-12b").n_layers // 6]
+
+
+def test_bug_splits_dedup_class():
+    dec = decompose("gpt", "dp2xtp2", bug="wrong_spec", bug_layer=3)
+    assert dec.n_unique == 4             # embed, clean layer, bug layer, head
+    _, bug_key = dec.obset.blocks[4]     # block 4 == layer3
+    assert dec.obset.block_indices(bug_key) == [4]
+
+
+def test_unsupported_family_raises():
+    with pytest.raises(ModelCheckError, match="family"):
+        decompose("mamba2-1.3b", "dp2")
+    with pytest.raises(ModelCheckError, match="unknown model"):
+        decompose("nope", "dp2")
+    with pytest.raises(ModelCheckError, match="bug_layer"):
+        decompose("gpt", "dp2", bug="wrong_spec", bug_layer=99)
+
+
+def test_obligation_key_ignores_fn_identity():
+    """Keys hash structure, not callables: rebuilding the same obligation
+    yields the same key even though the closures differ."""
+    cfg, plan = load_config("gpt"), parse_plan("dp2xtp2")
+    a = layer_obligation(cfg, plan)
+    b = layer_obligation(cfg, plan)
+    assert a.seq_fn is not b.seq_fn and a.key == b.key
+    assert layer_obligation(cfg, plan, role="local").key != a.key
+
+
+# ---------------------------------------------------------------------------
+# whole-model verification
+# ---------------------------------------------------------------------------
+
+def test_gpt_whole_model_certificate():
+    """The acceptance run: a clean whole-model certificate with strictly
+    fewer unique obligations than blocks, every seam matching the
+    spec-promised relation."""
+    report = check_model("gpt", "dp2xtp2", workers=0)
+    assert report.verdict == "certificate" and report.ok
+    assert report.unique_obligations < report.total_blocks
+    assert report.dedup_ratio > 1.0
+    assert all(b.seam_ok for b in report.blocks)
+    assert report.gs_ops_total > 0
+    # dedup bookkeeping: later layers are cache hits
+    layer_blocks = [b for b in report.blocks if b.name.startswith("layer")]
+    assert not layer_blocks[0].cached
+    assert all(b.cached for b in layer_blocks[1:])
+
+
+def test_cache_hit_certificate_byte_identical():
+    """All deduped blocks resolve to one nested report: the certificate a
+    cache hit returns is byte-identical to the verified one (the satellite
+    acceptance)."""
+    report = check_model("gpt", "dp2", workers=0)
+    layers = [b for b in report.blocks if b.name.startswith("layer")]
+    keys = {b.obligation for b in layers}
+    assert len(keys) == 1                # one obligation backs every layer
+    (key,) = keys
+    blob = json.dumps(report.reports[key], sort_keys=True)
+    for b in layers:                     # every block, hit or not, sees the
+        assert json.dumps(                # same serialized certificate
+            report.reports[b.obligation], sort_keys=True) == blob
+
+
+def test_injected_bug_localizes_to_block():
+    report = check_model("gpt", "dp2xtp2", bug="wrong_spec", bug_layer=2,
+                         workers=0)
+    assert report.verdict == "refinement_error" and report.ok
+    assert report.failing_blocks == [3]  # embed is block 0
+    bad = report.blocks[3]
+    assert bad.name == "layer2" and not bad.cached
+    loc = report.reports[bad.obligation]["localization"]
+    assert loc["op_name"]                # a concrete operator is named
+
+
+def test_moe_model_certificate():
+    report = check_model("mixtral-8x7b", "tp2", workers=0)
+    assert report.verdict == "certificate" and report.ok
+    assert report.unique_obligations == 3
+
+
+def test_seam_relation_shapes():
+    """expected_output_relation builds the nested concat the plan promises."""
+    from repro.core.terms import pretty
+    t = expected_output_relation("y", (2, 4, 8), "f",
+                                 parse_plan("dp2xtp2").spec_for(
+                                     ("batch", "seq", "embed")),
+                                 {"dp": 2, "tp": 2})
+    assert pretty(t, 999) == "concat(y@dp0,tp0, y@dp1,tp0, dim=0)"
+    t = expected_output_relation("y", (2, 4, 8), "f",
+                                 parse_plan("dp2").spec_for(
+                                     ("batch", "seq", "embed")),
+                                 {"dp": 2})
+    assert pretty(t, 999) == "concat(y@dp0, y@dp1, dim=0)"
+
+
+def test_scheduler_pool_matches_inprocess():
+    seq = check_model("gpt", "dp2", workers=0)
+    par = check_model("gpt", "dp2", workers=2)
+    assert seq.stable_summary() == par.stable_summary()
+    for key in seq.reports:
+        assert seq.reports[key]["r_o"] == par.reports[key]["r_o"]
+
+
+def test_model_report_json_roundtrip():
+    from repro.modelcheck import ModelReport
+    report = check_model("gpt", "dp2", workers=0)
+    d = report.to_json()
+    assert d["schema_version"] >= 1
+    assert "timing" in d and "phase_s_sum" in d["timing"]
+    back = ModelReport.from_json(json.loads(json.dumps(d)))
+    assert back.stable_summary() == report.stable_summary()
+
+
+# ---------------------------------------------------------------------------
+# registry entries + CLI
+# ---------------------------------------------------------------------------
+
+def test_model_task_registry():
+    tasks = list_model_tasks()
+    assert f"gpt@{DEFAULT_PLANS[0]}" in tasks
+    assert all("@" in t for t in tasks)
+    assert set(t.split("@", 1)[0] for t in tasks) == set(supported_models())
+    with pytest.raises(KeyError):
+        check_model_task("gpt")          # missing @plan
+
+
+def test_check_model_task_runs():
+    report = check_model_task("gpt@dp2", workers=0)
+    assert report.verdict == "certificate"
+
+
+def test_cli_model_json_envelope(capsys):
+    from repro.launch.verify import main
+    rc = main(["--model", "gpt", "--plan", "dp2", "--workers", "0",
+               "--json"])
+    assert not rc
+    env = json.loads(capsys.readouterr().out)
+    assert env["schema_version"] == 2 and env["kind"] == "model"
+    assert env["report"]["verdict"] == "certificate"
+    assert "phase_s_sum" in env["timing"]
+
+
+def test_cli_case_json_envelope(capsys):
+    from repro.launch.verify import main
+    main(["--case", "tp_layer", "--json"])
+    env = json.loads(capsys.readouterr().out)
+    assert env["schema_version"] == 2 and env["kind"] == "case"
+    assert env["report"]["verdict"] == "certificate"
+    assert set(env["timing"]) == {"wall_s", "infer_s", "phase_s"}
+    assert env["timing"]["phase_s"].get("saturate", 0) >= 0
+
+
+# ---------------------------------------------------------------------------
+# capture_chain (named-block sequence capture)
+# ---------------------------------------------------------------------------
+
+def test_capture_chain_threads_names_and_avals():
+    import jax
+    import jax.numpy as jnp
+
+    def blk(x, w):
+        return jnp.tanh(x @ w)
+
+    aval = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    graphs, carry_avals, carry_names = capture_chain(
+        [("b0", blk, [aval], ["w"]), ("b1", blk, [aval], ["w"])],
+        [aval], ["x"])
+    assert [n for n, _ in graphs] == ["b0", "b1"]
+    g0, g1 = graphs[0][1], graphs[1][1]
+    assert g0.inputs == ["x", "b0.w"]
+    assert g1.inputs == ["b0.out0", "b1.w"]   # seam: names thread
+    assert carry_names == ["b1.out0"]
+    assert tuple(carry_avals[0].shape) == (4, 4)
+    assert g0.n_ops == g1.n_ops == 2
+
+
+def test_sequential_chain_op_count():
+    dec = decompose("gpt", "dp2")
+    graphs, _, names = dec.sequential_chain()
+    assert len(graphs) == dec.total_blocks
+    assert names == ["head.out0"]
+    total = sum(g.n_ops for _, g in graphs)
+    assert total > 14 * 10               # a real model, not a stub
