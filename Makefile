@@ -4,7 +4,7 @@ PY ?= python
 PYTEST ?= $(PY) -m pytest
 
 .PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden \
-	modelcheck-smoke
+	modelcheck-smoke gradcheck-smoke
 
 # tier-1 gate: full test suite
 verify:
@@ -49,3 +49,12 @@ modelcheck-smoke:
 	PYTHONPATH=src $(PY) -m repro.launch.verify --model gpt --plan dp2xtp2
 	PYTHONPATH=src $(PY) -m repro.launch.verify --model gpt --plan dp2xtp2 \
 		--inject-bug wrong_spec --bug-layer 3; test $$? -eq 1
+
+# training-step verification smoke: the dp_accum train strategy must emit a
+# clean per-parameter gradient certificate (microbatch accumulation through
+# the dus_concat lemma), and the injected accumulation-rescale bug must be
+# localized to exactly the offending parameter (rc=1)
+gradcheck-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.verify --train dp_accum
+	PYTHONPATH=src $(PY) -m repro.launch.verify --train dp_accum \
+		--inject-bug accum_no_rescale; test $$? -eq 1

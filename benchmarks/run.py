@@ -4,6 +4,8 @@
   fig5      scaling vs parallelism degree                     (paper Fig. 5)
   fam_scaling  FSDP / pipeline / 2D-mesh family scaling with
             degree (incl. per-axis tuple degrees)
+  gradcheck training-step verification per train strategy
+            (repro.gradcheck per-parameter gradient obligations)
   suite     repro.api.Suite process-pool runner vs sequential
             run_case looping on the clean degree-2 matrix
   ablation  sp_moe deg 8: optimized engine vs the same commit
@@ -115,15 +117,15 @@ def fig5_scaling(rows, out, repeats=None):
 
 def fam_scaling(rows, out, repeats=None):
     """Scaling of the weight-sharded / pipeline / 2D-mesh families with
-    degree (per mesh axis for tp_dp_2d).  fsdp_mlp stops at degree 4 here:
-    degree 8 verifies but its 8-wide reduce_scatter add chains push the
-    wall time past 20 s (see EXPERIMENTS.md §Gaps), which would dominate
-    the whole harness."""
+    degree (per mesh axis for tp_dp_2d) — including the two former scale
+    limits the n-ary add normal form closed: ``fsdp_mlp@8`` (was ~21 s of
+    assoc/comm tax, now seconds) and the 16-rank ``tp_dp_2d@(4,4)`` (used
+    to blow up saturation and false-alarm, now milliseconds)."""
     from repro.api import degree_token
     verify = _cases()
     sec = out.setdefault("fam_scaling", {})
-    for case, degrees in [("fsdp_mlp", (2, 4)), ("pp_stage", (2, 4)),
-                          ("tp_dp_2d", ((2, 2), (4, 2)))]:
+    for case, degrees in [("fsdp_mlp", (2, 4, 8)), ("pp_stage", (2, 4)),
+                          ("tp_dp_2d", ((2, 2), (4, 2), (4, 4)))]:
         for deg in degrees:
             rec = _timed_case(verify, case, degree=deg, repeats=repeats)
             key = f"{case}_deg{degree_token(deg)}"
@@ -168,6 +170,42 @@ def modelcheck_bench(rows, out, repeats=None):
         }
         rows.append((f"modelcheck/{key}", sec[key]["wall_ms"] * 1e3,
                      rep.unique_obligations))
+
+
+def gradcheck_bench(rows, out, repeats=None):
+    """Training-step verification (repro.gradcheck): wall/infer time per
+    train strategy — the per-parameter gradient obligations with the
+    transposition seam check.  The case list is identical in smoke and
+    full runs so the bench gate (scripts/check_bench.py) can require
+    every baseline case."""
+    import statistics as _st
+
+    from repro.gradcheck import check_train
+    repeats = repeats or REPEATS
+    sec = out.setdefault("gradcheck", {})
+    cases = [("dp", 2), ("dp_accum", 2), ("fsdp", 2), ("tp_dp_2d", (4, 4))]
+    for strategy, degree in cases:
+        def one():
+            rep = check_train(strategy, degree=degree, workers=0)
+            assert rep.verdict == "certificate", \
+                f"train@{strategy}: {rep.verdict} ({rep.failing_params})"
+            return rep
+        one()                                          # warmup
+        walls, infers, rep = [], [], None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            rep = one()
+            walls.append((time.perf_counter() - t0) * 1e3)
+            infers.append(rep.timing()["infer_s_sum"] * 1e3)
+        from repro.api import degree_token
+        key = f"train@{strategy}@deg{degree_token(degree)}"
+        sec[key] = {
+            "wall_ms": round(_st.median(walls), 3),
+            "infer_ms": round(_st.median(infers), 3),
+            "params": len(rep.params),
+        }
+        rows.append((f"gradcheck/{key}", sec[key]["wall_ms"] * 1e3,
+                     len(rep.params)))
 
 
 def suite_runner(rows, out, repeats=None):
@@ -355,8 +393,10 @@ def main(argv=None) -> None:
         lambda: fig4_verification_time(rows, out, repeats),
         lambda: fig5_scaling(rows, out, repeats),
         lambda: modelcheck_bench(rows, out, repeats),
+        lambda: gradcheck_bench(rows, out, repeats),
     ]
-    names = ["fig4_verification_time", "fig5_scaling", "modelcheck_bench"]
+    names = ["fig4_verification_time", "fig5_scaling", "modelcheck_bench",
+             "gradcheck_bench"]
     if not args.smoke:
         sections += [
             lambda: fam_scaling(rows, out, repeats),

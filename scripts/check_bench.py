@@ -23,8 +23,9 @@ import sys
 
 # the sections a --smoke run produces; all carry the hot-path metric
 # (modelcheck's infer_ms is the summed relation-inference time over the
-# model's unique obligations — the whole-model hot path after dedup)
-SMOKE_SECTIONS = ("fig4", "fig5", "modelcheck")
+# model's unique obligations; gradcheck's is the sum over a train
+# strategy's per-parameter gradient obligations)
+SMOKE_SECTIONS = ("fig4", "fig5", "modelcheck", "gradcheck")
 METRIC = "infer_ms"
 
 

@@ -34,6 +34,19 @@ case "$target" in
                  echo "injected bug not localized (rc=$rc, want 1)" >&2
                  exit 1
                fi ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke)" >&2
+  # train-step smoke: dp_accum certifies per-parameter; the injected
+  # gradient bug localizes to its parameter.  rc must be exactly 1 (bug
+  # detected AND localized) — rc 2 means mis-localization, which must fail.
+  gradcheck-smoke)
+               PYTHONPATH=src python -m repro.launch.verify \
+                 --train dp_accum
+               rc=0
+               PYTHONPATH=src python -m repro.launch.verify \
+                 --train dp_accum --inject-bug accum_no_rescale || rc=$?
+               if [ "$rc" -ne 1 ]; then
+                 echo "injected grad bug not localized (rc=$rc, want 1)" >&2
+                 exit 1
+               fi ;;
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke)" >&2
      exit 2 ;;
 esac

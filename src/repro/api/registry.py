@@ -222,3 +222,31 @@ def check_model_task(task: str, **kw):
                        f"like `gpt@dp2xtp2`")
     from ..modelcheck import check_model
     return check_model(model, plan, **kw)
+
+
+# ---------------------------------------------------------------------------
+# train-step tasks (repro.gradcheck)
+# ---------------------------------------------------------------------------
+# Training-step verification tasks live beside the case and ``model@plan``
+# registries under ``train@strategy`` ids (e.g. ``train@dp_accum``) —
+# resolved lazily so importing ``repro.api`` does not pull gradcheck in.
+
+def list_train_tasks() -> Tuple[str, ...]:
+    """``train@strategy`` ids: every registered train-step strategy."""
+    from ..gradcheck import list_train_strategies
+    return tuple(f"train@{s}" for s in list_train_strategies())
+
+
+def check_train_task(task: str, **kw):
+    """Run one ``train@strategy`` train-step task -> ``TrainReport``.
+
+    Keyword arguments pass through to
+    :func:`repro.gradcheck.check_train` (``degree=``, ``bug=``,
+    ``workers=``, ``engine_opts=``, ...).
+    """
+    prefix, sep, strategy = str(task).partition("@")
+    if not sep or prefix != "train" or not strategy:
+        raise KeyError(f"bad train task `{task}` — expected "
+                       f"`train@strategy` like `train@dp_accum`")
+    from ..gradcheck import check_train
+    return check_train(strategy, **kw)

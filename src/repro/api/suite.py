@@ -80,6 +80,22 @@ def _run_batch(tasks: List[Tuple[str, int, Optional[str]]],
     return [_run_task(t, engine_opts) for t in tasks]
 
 
+def terminate_pool(pool: ProcessPoolExecutor) -> None:
+    """Release a pool without blocking on wedged workers.
+
+    ``shutdown(wait=True)`` would join a worker stuck in a hung task, so
+    drop the executor handle and terminate the processes — idle workers
+    die instantly, wedged ones get SIGTERM instead of leaking until their
+    task (never) finishes.  Shared by the Suite, modelcheck, and
+    gradcheck schedulers.
+    """
+    procs = list(getattr(pool, "_processes", {}).values())
+    pool.shutdown(wait=False, cancel_futures=True)
+    for p in procs:
+        if p.is_alive():
+            p.terminate()
+
+
 def _warm_worker() -> None:
     """Pool initializer: pay the per-process jax backend cost up front.
 
@@ -243,19 +259,10 @@ class Suite:
         return self._pool
 
     def shutdown(self) -> None:
-        """Release the pool without blocking on wedged workers.
-
-        ``shutdown(wait=True)`` would join a worker stuck in a hung task,
-        so we drop the executor handle and terminate the processes — idle
-        workers die instantly, wedged ones get SIGTERM instead of leaking
-        until their task (never) finishes.
-        """
+        """Release the pool without blocking on wedged workers (see
+        :func:`terminate_pool`)."""
         if self._pool is not None:
-            procs = list(getattr(self._pool, "_processes", {}).values())
-            self._pool.shutdown(wait=False, cancel_futures=True)
-            for p in procs:
-                if p.is_alive():
-                    p.terminate()
+            terminate_pool(self._pool)
             self._pool = None
             self._pool_workers = 0
 

@@ -26,6 +26,11 @@ from .terms import (EW1_OPS, EW2_OPS, REDUCE_OPS, Term, add_n, bmm, broadcast,
                     concat, convert, ew1, ew2, gather_rows, integer_pow, lit,
                     matmul, reduce_, reshape, select, slice_, transpose)
 
+# Widest n-ary add the normal form maintains: a 16-rank multi-axis psum is a
+# 16-ary node; flattening stops growing chains past this (soundness is
+# unaffected — only joinability of absurdly wide chains).
+MAX_ADD_WIDTH = 64
+
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -176,8 +181,54 @@ def _bcast_piece(eg: EGraph, cw: int, full_shape, bdims, piece_shape, dim) -> Op
     return broadcast(cls(eg, cw), piece_shape, bdims)
 
 
+def _addn_concat(eg: EGraph, node: ENode, cid: int):
+    """n-ary add distributes over concat: every addend must decompose as a
+    matching concat on one dim (same piece sizes), or be a broadcast
+    constant along it."""
+    chs = node.children
+    if len(chs) > MAX_ADD_WIDTH:
+        return []
+    eqs = []
+    seen = set()
+    for anchor in chs:
+        for dim, xs in concat_reps(eg, anchor):
+            if len(xs) > MAX_FANOUT:
+                continue
+            sizes = tuple(eg.info(x).shape[dim] for x in xs)
+            if (dim, sizes) in seen:
+                continue
+            seen.add((dim, sizes))
+            cols = []
+            ok = True
+            for ch in chs:
+                col = None
+                for d2, ys in concat_reps(eg, ch):
+                    if d2 == dim and len(ys) == len(xs) and \
+                            tuple(eg.info(y).shape[dim] for y in ys) == sizes:
+                        col = [cls(eg, y) for y in ys]
+                        break
+                if col is None:
+                    for cw, shape, bdims in broadcast_reps(eg, ch):
+                        pieces = [_bcast_piece(eg, cw, shape, bdims,
+                                               eg.info(x).shape, dim)
+                                  for x in xs]
+                        if all(p is not None for p in pieces):
+                            col = pieces
+                            break
+                if col is None:
+                    ok = False
+                    break
+                cols.append(col)
+            if ok:
+                eqs.append((cid, concat([add_n([col[i] for col in cols])
+                                         for i in range(len(xs))], dim)))
+    return eqs
+
+
 def _ew2_concat(eg: EGraph, node: ENode, cid: int):
     op = node.op
+    if op == "add" and len(node.children) != 2:   # n-ary add normal form
+        return _addn_concat(eg, node, cid)
     ca, cb = node.children
     sh_a, sh_b = eg.info(ca).shape, eg.info(cb).shape
     if sh_a != sh_b:
@@ -392,14 +443,14 @@ def _slice_of_ew(eg: EGraph, node: ENode, cid: int):
                 sub = cls(eg, eg.hashcons[probe])
                 eqs.append((cid, _rebuild_unary(n, sub)))
         elif n.op in EW2_OPS:
-            l_, r_ = n.children
-            pl = ENode("slice", (("starts", starts), ("limits", limits)),
-                       (eg.find(l_),))
-            pr = ENode("slice", (("starts", starts), ("limits", limits)),
-                       (eg.find(r_),))
-            if pl in eg.hashcons and pr in eg.hashcons:
-                eqs.append((cid, ew2(n.op, cls(eg, eg.hashcons[pl]),
-                                     cls(eg, eg.hashcons[pr]))))
+            probes = [ENode("slice", (("starts", starts), ("limits", limits)),
+                            (eg.find(c),)) for c in n.children]
+            if all(p in eg.hashcons for p in probes):
+                args = [cls(eg, eg.hashcons[p]) for p in probes]
+                if len(args) == 2:
+                    eqs.append((cid, ew2(n.op, args[0], args[1])))
+                elif n.op == "add":            # n-ary add normal form
+                    eqs.append((cid, add_n(args)))
     return eqs
 
 
@@ -520,19 +571,18 @@ def _reduce_add(eg: EGraph, node: ENode, cid: int):
     axes = dict(node.attrs)["axes"]
     eqs = []
     for n2 in eg.nodes_of(cx, "add"):
-        ca, cb = n2.children
-        pa = ENode("reduce_sum", (("axes", axes),), (eg.find(ca),))
-        pb = ENode("reduce_sum", (("axes", axes),), (eg.find(cb),))
-        ha, hb = pa in eg.hashcons, pb in eg.hashcons
-        if not (ha or hb):
+        chs = n2.children                   # n-ary add normal form
+        probes = [ENode("reduce_sum", (("axes", axes),), (eg.find(c),))
+                  for c in chs]
+        hits = [p in eg.hashcons for p in probes]
+        if not any(hits):
             continue
-        # one addend's reduction must pre-exist; the other may be built so
-        # the lemma walks down a psum's nested add chain one level per fire
-        ta = cls(eg, eg.hashcons[pa]) if ha \
-            else reduce_("reduce_sum", cls(eg, ca), axes)
-        tb = cls(eg, eg.hashcons[pb]) if hb \
-            else reduce_("reduce_sum", cls(eg, cb), axes)
-        eqs.append((cid, ew2("add", ta, tb)))
+        # at least one addend's reduction must pre-exist; the rest may be
+        # built, so one fire resolves the whole (flattened) psum chain
+        terms = [cls(eg, eg.hashcons[p]) if h
+                 else reduce_("reduce_sum", cls(eg, c), axes)
+                 for c, p, h in zip(chs, probes, hits)]
+        eqs.append((cid, add_n(terms)))
     return eqs
 
 
@@ -587,9 +637,9 @@ def _scalar_factor(eg: EGraph, node: ENode, cid: int):
     ``add_div_dist``, triggered on the mul/div side so a sequential
     ``psum(x) / n`` can chase the per-rank ``x / n`` pieces.
 
-    CONSTRAINED (paper §4.3.2): one addend's scaled node must already exist
-    in the e-graph; the other may be built, so the lemma walks down a psum's
-    nested add chain one level per fire instead of generatively scaling
+    CONSTRAINED (paper §4.3.2): at least one addend's scaled node must
+    already exist in the e-graph; the rest may be built, so one fire
+    resolves the whole flattened n-ary add instead of generatively scaling
     every add in sight (unconstrained, it blows up the 8-rank chains)."""
     op = node.op
     ca, cb = node.children
@@ -602,9 +652,9 @@ def _scalar_factor(eg: EGraph, node: ENode, cid: int):
             continue                     # only x/c distributes, not c/x
         cr = eg.find(right)
         for n2 in eg.nodes_of(left, "add"):
-            c1, c2 = n2.children
-            probes = {}
-            for ch in (c1, c2):
+            chs = n2.children            # n-ary add normal form
+            hits = []
+            for ch in chs:
                 hit = None
                 for order in (((eg.find(ch), cr)), ((cr, eg.find(ch)))):
                     pn = ENode(op, (), order)
@@ -613,13 +663,13 @@ def _scalar_factor(eg: EGraph, node: ENode, cid: int):
                         break
                     if op == "div":      # div is not commutative
                         break
-                probes[ch] = hit
-            if all(h is None for h in probes.values()):
+                hits.append(hit)
+            if all(h is None for h in hits):
                 continue
-            terms = [cls(eg, probes[ch]) if probes[ch] is not None
+            terms = [cls(eg, h) if h is not None
                      else ew2(op, cls(eg, ch), cls(eg, right))
-                     for ch in (c1, c2)]
-            eqs.append((cid, ew2("add", terms[0], terms[1])))
+                     for ch, h in zip(chs, hits)]
+            eqs.append((cid, add_n(terms)))
     return eqs
 
 
@@ -860,16 +910,36 @@ def _gather_lemmas(eg: EGraph, node: ENode, cid: int):
 # algebraic normalization
 # ---------------------------------------------------------------------------
 
-def _add_mul_acom(eg: EGraph, node: ENode, cid: int):
+def _add_norm(eg: EGraph, node: ENode, cid: int):
+    """Flattened n-ary add normal form (replaces assoc/comm saturation).
+
+    Every ``add`` e-node is driven toward one canonical representation:
+    addends that are themselves adds are inlined (flattening — this is
+    associativity, resolved structurally instead of by generative
+    rotation), and the flattened addend list is re-installed sorted by
+    e-class id (commutativity — two adds over the same multiset of
+    classes meet in the sorted node).  One rewrite per node per round vs
+    the old ``add_mul_acom``'s O(Catalan) regrouping saturation, which is
+    what blew up the 16-rank ``tp_dp_2d@(4,4)`` psum chains and taxed
+    ``fsdp_mlp@8`` ~21 s (EXPERIMENTS.md).  ``mul`` keeps plain binary
+    commutativity."""
     op = node.op
-    ca, cb = node.children
-    eqs = [(cid, ew2(op, cls(eg, cb), cls(eg, ca)))]  # comm
-    if op == "add":
-        for n2 in eg.nodes_of(ca, "add"):
-            x, y = n2.children
-            eqs.append((cid, ew2("add", cls(eg, x),
-                                 ew2("add", cls(eg, y), cls(eg, cb)))))
-    return eqs
+    if op == "mul":
+        ca, cb = node.children
+        return [(cid, ew2("mul", cls(eg, cb), cls(eg, ca)))]
+    chs = [eg.find(c) for c in node.children]
+    flat = []
+    for c in chs:
+        reps = sorted(eg.nodes_of(c, "add"),
+                      key=lambda n: (len(n.children), n.children))
+        if reps and len(flat) + len(reps[0].children) <= MAX_ADD_WIDTH:
+            flat.extend(eg.find(x) for x in reps[0].children)
+        else:
+            flat.append(c)
+    canon = sorted(flat)
+    if canon == chs:
+        return []
+    return [(cid, add_n([cls(eg, c) for c in canon]))]
 
 
 def _sub_to_add(eg: EGraph, node: ENode, cid: int):
@@ -892,12 +962,77 @@ def _dus_full(eg: EGraph, node: ENode, cid: int):
     return []
 
 
-def _lit_of(eg: EGraph, cid: int):
-    """Return the scalar literal value if this class is lit or broadcast(lit)."""
+def _dus_concat(eg: EGraph, node: ENode, cid: int):
+    """CONSTRAINED (paper §4.3.2): a *complete* dynamic_update_slice chain
+    over a zero-initialized buffer is the concat of its updates:
+
+        dus(dus(zeros, u0, (0, 0)), u1, (k, 0)) = concat(u0, u1, dim=0)
+
+    when the updates exactly tile the buffer (contiguous, non-overlapping)
+    along one dim with every other dim written in full.  This is the
+    microbatch-accumulation scatter-buffer pattern — per-microbatch grads
+    written into a zeros buffer then re-reduced — which EXPERIMENTS.md
+    carried as the ``grad_accum`` completeness gap: without this lemma the
+    buffer's reduce never equals the sum of the pieces.  Only the chain
+    head covers the full buffer, so inner dus nodes bail cheaply."""
+    base_shape = eg.info(cid).shape
+    nd = len(base_shape)
+    d = None
+    pieces = []                      # (start, limit, update class)
+    cur = node
+    base = None
+    for _ in range(MAX_FANOUT + 1):
+        cx, cu = cur.children
+        starts = dict(cur.attrs)["starts"]
+        u_shape = eg.info(cu).shape
+        if len(u_shape) != nd:
+            return []
+        dims = [i for i in range(nd)
+                if not (starts[i] == 0 and u_shape[i] == base_shape[i])]
+        if len(dims) != 1:
+            # a full-buffer write anywhere in the chain makes the pieces
+            # below it dead (dus_full covers the head case) — treating it
+            # as a tile along the other writes' dim would be UNSOUND
+            return []
+        if d is None:
+            d = dims[0]
+        elif dims[0] != d:
+            return []
+        pieces.append((starts[d], starts[d] + u_shape[d], eg.find(cu)))
+        subs = sorted(eg.nodes_of(eg.find(cx), "dus"),
+                      key=lambda n: (n.attrs, n.children))
+        if not subs:
+            base = eg.find(cx)
+            break
+        cur = subs[0]
+    # the chain must bottom out in a zero-init buffer (a literal 0 or a
+    # broadcast of one — `_lit_of` chases both, cycle-safely)
+    if base is None or _lit_of(eg, base) != 0 or d is None:
+        return []
+    # later writes win, so require a strict non-overlapping exact tiling
+    pieces.sort()
+    if len(pieces) < 2 or pieces[0][0] != 0 \
+            or pieces[-1][1] != base_shape[d]:
+        return []
+    for (s1, l1, _), (s2, _l2, _) in zip(pieces, pieces[1:]):
+        if l1 != s2:
+            return []
+    return [(cid, concat([cls(eg, c) for _, _, c in pieces], d))]
+
+
+def _lit_of(eg: EGraph, cid: int, _seen: Optional[set] = None):
+    """Return the scalar literal value if this class is lit or broadcast(lit).
+    Cycle-safe: merged classes can hold broadcast chains that loop."""
+    cid = eg.find(cid)
+    if _seen is None:
+        _seen = set()
+    if cid in _seen:
+        return None
+    _seen.add(cid)
     for n in eg.nodes_of(cid, "lit"):
         return dict(n.attrs)["value"]
     for n in eg.nodes_of(cid, "broadcast"):
-        v = _lit_of(eg, n.children[0])
+        v = _lit_of(eg, n.children[0], _seen)
         if v is not None:
             return v
     return None
@@ -943,15 +1078,26 @@ def _mul_lit_fold(eg: EGraph, node: ENode, cid: int):
 
 
 def _zero_one_identity(eg: EGraph, node: ENode, cid: int):
-    """add(x, 0) = x; mul(x, 1) = x; mul(x, 0) = 0; add(x, x) = 2x."""
+    """add(x, 0) = x; mul(x, 1) = x; mul(x, 0) = 0; add(x, x) = 2x.
+    n-ary adds drop their literal-zero addends."""
     op = node.op
-    ca, cb = node.children
     eqs = []
     shape = eg.info(cid).shape
 
     def bl(v):
         t = lit(float(v))
         return broadcast(t, shape, ()) if shape else t
+
+    if op == "add" and len(node.children) != 2:   # n-ary add normal form
+        keep = [c for c in node.children if _lit_of(eg, c) != 0]
+        if len(keep) == len(node.children):
+            return []
+        if not keep:
+            return [(cid, bl(0.0))]
+        if len(keep) == 1:
+            return [(cid, eg.find(keep[0]))]
+        return [(cid, add_n([cls(eg, c) for c in keep]))]
+    ca, cb = node.children
 
     for left, right in ((ca, cb), (cb, ca)):
         v = _lit_of(eg, right)
@@ -967,36 +1113,55 @@ def _zero_one_identity(eg: EGraph, node: ENode, cid: int):
 
 
 def _add_div_dist(eg: EGraph, node: ENode, cid: int):
-    """add(div(a,c), div(b,c)) = div(add(a,b), c) and
-    add(mul(a,c), mul(b,c)) = mul(add(a,b), c) for literal c —
-    non-generative factoring for the loss-scaling bug family."""
-    ca, cb = node.children
+    """add(div(a,c), ..., div(z,c)) = div(add(a,...,z), c) and the mul
+    analogue for literal c — non-generative factoring for the loss-scaling
+    bug family, over the flattened n-ary add normal form (every addend
+    must carry the same literal factor)."""
+    chs = node.children
     eqs = []
-    for na in eg.nodes_of(ca, "div"):
+    # div: candidate divisors come from the first addend's div reps
+    for na in eg.nodes_of(chs[0], "div"):
         va = _lit_of(eg, na.children[1])
         if va is None:
             continue
-        for nb in eg.nodes_of(cb, "div"):
-            vb = _lit_of(eg, nb.children[1])
-            if vb == va:
-                eqs.append((cid, ew2("div",
-                                     ew2("add", cls(eg, na.children[0]),
-                                         cls(eg, nb.children[0])),
-                                     cls(eg, na.children[1]))))
-    for na in eg.nodes_of(ca, "mul"):
+        nums = [cls(eg, na.children[0])]
+        ok = True
+        for ch in chs[1:]:
+            m = None
+            for nb in eg.nodes_of(ch, "div"):
+                if _lit_of(eg, nb.children[1]) == va:
+                    m = nb.children[0]
+                    break
+            if m is None:
+                ok = False
+                break
+            nums.append(cls(eg, m))
+        if ok:
+            eqs.append((cid, ew2("div", add_n(nums),
+                                 cls(eg, na.children[1]))))
+    for na in eg.nodes_of(chs[0], "mul"):
         for ia in (0, 1):
             va = _lit_of(eg, na.children[ia])
             if va is None:
                 continue
-            for nb in eg.nodes_of(cb, "mul"):
-                for ib in (0, 1):
-                    vb = _lit_of(eg, nb.children[ib])
-                    if vb == va:
-                        eqs.append((cid, ew2(
-                            "mul",
-                            ew2("add", cls(eg, na.children[1 - ia]),
-                                cls(eg, nb.children[1 - ib])),
-                            cls(eg, na.children[ia]))))
+            nums = [cls(eg, na.children[1 - ia])]
+            ok = True
+            for ch in chs[1:]:
+                m = None
+                for nb in eg.nodes_of(ch, "mul"):
+                    for ib in (0, 1):
+                        if _lit_of(eg, nb.children[ib]) == va:
+                            m = nb.children[1 - ib]
+                            break
+                    if m is not None:
+                        break
+                if m is None:
+                    ok = False
+                    break
+                nums.append(cls(eg, m))
+            if ok:
+                eqs.append((cid, ew2("mul", add_n(nums),
+                                     cls(eg, na.children[ia]))))
     return eqs
 
 
@@ -1039,13 +1204,14 @@ LEMMAS: list[Lemma] = [
     Lemma("reshape_alg", {"reshape"}, _reshape_lemmas),
     Lemma("broadcast_alg", {"broadcast"}, _broadcast_lemmas),
     Lemma("gather_split", {"gather_rows"}, _gather_lemmas),
-    Lemma("add_mul_acom", {"add", "mul"}, _add_mul_acom),
+    Lemma("add_norm", {"add", "mul"}, _add_norm),
     Lemma("mul_lit_fold", {"mul", "div"}, _mul_lit_fold),
     Lemma("zero_one_identity", {"add", "mul"}, _zero_one_identity),
     Lemma("add_div_dist", {"add"}, _add_div_dist),
     Lemma("sub_to_add", {"sub"}, _sub_to_add),
     Lemma("neg_neg", {"neg"}, _neg_identity),
     Lemma("dus_full", {"dus"}, _dus_full),
+    Lemma("dus_concat", {"dus"}, _dus_concat),
     Lemma("convert_fold", {"convert"}, _convert_convert),
 ]
 

@@ -14,6 +14,8 @@ Op vocabulary (normalized from jaxpr primitives by ``repro.core.capture``):
               ew1 family: neg exp log tanh logistic rsqrt sqrt sin cos abs
                           erf relu floor sign square integer_pow(p) stop_grad
               ew2 family: add sub mul div max2 min2 pow eq lt gt and or
+                          (add is n-ary: ``add_n`` builds the flattened
+                           normal form; 2-ary adds are the legacy binary op)
               reduce_sum(x, axes) reduce_max(x, axes) reduce_min(x, axes)
               select(pred, on_true, on_false)  iota(shape, dim)
               dus(x, upd, starts)              cumsum(x, axis)
@@ -230,11 +232,34 @@ def add(x: Term, y: Term) -> Term:
 
 
 def add_n(xs: Iterable[Term]) -> Term:
-    xs = list(xs)
-    out = xs[0]
-    for x in xs[1:]:
-        out = add(out, x)
-    return out
+    """Flattened n-ary add — the engine's add normal form.
+
+    ``add`` nodes carry *any* number of addends (>= 2); nested adds are
+    flattened at construction so a psum over a 16-rank group is one 16-ary
+    node instead of a depth-15 binary chain (whose assoc/comm saturation
+    blew up the 2D-mesh and FSDP cases — see EXPERIMENTS.md).  A 2-ary add
+    is exactly the old binary node, so existing certificates are unchanged.
+    """
+    flat: list = []
+    stack = list(xs)[::-1]
+    while stack:                    # flatten to fixpoint, preserving order
+        x = stack.pop()
+        if x.op == "add":
+            stack.extend(reversed(x.args))
+        else:
+            flat.append(x)
+    assert flat
+    if len(flat) == 1:
+        return flat[0]
+    if len(flat) == 2:
+        return ew2("add", flat[0], flat[1])
+    shape: tuple = ()
+    for x in flat:
+        assert x.shape == shape or x.shape == () or shape == (), \
+            f"add_n shape mismatch {x.shape} vs {shape}"
+        shape = shape or x.shape
+    dt = next((x.dtype for x in flat if x.shape), flat[0].dtype)
+    return Term("add", tuple(flat), (), shape, dt)
 
 
 def matmul(a: Term, b: Term) -> Term:
@@ -420,6 +445,11 @@ def _eval1(u: Term, go, env):
     if op == "integer_pow":
         return go(u.args[0]) ** u.attr("p")
     if op in EW2_OPS:
+        if op == "add" and len(u.args) != 2:   # n-ary add normal form
+            out = go(u.args[0])
+            for a in u.args[1:]:
+                out = np.add(out, go(a))
+            return out
         return _np_ew2(op)(go(u.args[0]), go(u.args[1]))
     if op == "matmul" or op == "bmm":
         return go(u.args[0]) @ go(u.args[1])

@@ -199,9 +199,9 @@ def ep_moe_layer(degree: int = 2, bug=None, tokens: int = 4, d_model: int = 4):
 # ---------------------------------------------------------------------------
 
 @register_strategy(
-    # degree 8 certifies but its 8-wide psum add chains take ~8 s
-    # (EXPERIMENTS.md §Gaps) — reachable via --degrees 8, not swept by default
-    "aux_loss", degrees=(2, 4),
+    # the n-ary add normal form collapsed degree 8 from ~8 s to
+    # milliseconds, so the full sweep is registered
+    "aux_loss", degrees=(2, 4, 8),
     bugs=[BugSpec("aux_scale", "refinement_error",
                   "each rank averages by its local element count before the "
                   "psum, inflating the loss by the parallelism degree")],
@@ -271,22 +271,23 @@ def sp_moe_layer(degree: int = 2, bug=None, seq: int = 16, d_model: int = 8,
 
 
 # ---------------------------------------------------------------------------
-# grad_accum — microbatch gradient accumulation (documented completeness gap)
+# grad_accum — microbatch gradient accumulation (gap closed by dus_concat)
 # ---------------------------------------------------------------------------
 
 @register_strategy(
-    "grad_accum", degrees=(2, 4), expected="incomplete",
+    "grad_accum", degrees=(2, 4),
     bugs=[BugSpec("grad_accum", "refinement_error",
                   "final normalization divides by the per-rank element "
                   "count — accumulated gradients n_steps x too large")],
-    description="microbatch grad accumulation (dus-buffer gap)")
+    description="microbatch grad accumulation (dus scatter buffer)")
 def grad_accum_step(degree: int = 2, bug=None, batch: int = 8,
                     d_model: int = 4):
     """Data-parallel gradient step with per-rank microbatch accumulation
     into a scatter buffer (dynamic_update_slice), then a psum and a global
-    normalization. The buffer-scatter accumulation is outside the clean
-    fragment (no dus-to-concat lemma yet), so even the correct version
-    false-alarms — documented gap, see EXPERIMENTS.md §Gaps.
+    normalization. The buffer-scatter accumulation certifies via the
+    constrained ``dus_concat`` lemma (a complete dus chain over a zero-init
+    buffer is the concat of its updates) — this was a documented
+    completeness gap until that lemma landed.
     Bug `grad_accum`: the final normalization divides by the per-rank
     element count instead of the global batch — the HF-regression class
     where accumulated gradients come out n_steps x too large."""
@@ -350,8 +351,9 @@ def ln_weight_grad(degree: int = 2, bug=None, seq: int = 8, d_model: int = 4):
 # ---------------------------------------------------------------------------
 
 @register_strategy(
-    # degree 8 verifies but its 8-wide reduce_scatter add chains take ~20 s
-    # (EXPERIMENTS.md §Gaps) — reachable via --degrees 8, not swept by default
+    # degree 8 certifies in ~3 s (was ~21 s before the n-ary add normal
+    # form) — reachable via --degrees 8, kept off the default sweep so the
+    # matrix stays sub-second
     "fsdp_mlp", degrees=(2, 4),
     bugs=[BugSpec("stale_shard", "refinement_error",
                   "the forward uses the local W1 shard tiled degree times "
@@ -463,7 +465,10 @@ def pp_stage_block(degree: int = 2, bug=None, batch: int = 4,
 # ---------------------------------------------------------------------------
 
 @register_strategy(
-    "tp_dp_2d", degrees=((2, 2), (2, 4), (4, 2)),
+    # (4, 4) — a 16-rank mesh whose multi-axis psum is a 16-wide add
+    # chain — certifies in milliseconds under the n-ary add normal form
+    # (it used to blow up assoc/comm saturation and false-alarm)
+    "tp_dp_2d", degrees=((2, 2), (2, 4), (4, 2), (4, 4)),
     bugs=[BugSpec("psum_wrong_axis", "refinement_error",
                   "the output all-reduce runs over the dp mesh axis instead "
                   "of tp — partial sums are combined across batch shards")],

@@ -1,0 +1,52 @@
+"""Backward-graph capture: ``jax.grad`` over the existing capture layer.
+
+The forward families in ``repro.dist.strategies`` verify what a rank
+*computes*; the training step is about what a rank *differentiates*.  This
+module turns a loss function into gradient functions whose jaxprs the
+existing ``repro.core.capture`` machinery traces like any other program —
+the backward pass is just more operators (transposed matmuls, activation
+derivatives, broadcast cotangents), so the lemma engine needs no new
+concepts, only the n-ary add normal form to keep the (much wider) gradient
+add chains tractable.
+
+    seq_grad  = grad_of(loss, argnums=2)          # d loss / d w2
+    gs        = capture_grad(loss, avals, names, wrt=2)   # backward Graph
+
+``capture_grad_spmd`` is the distributed flavour: the per-rank gradient
+function (local backward + whatever collectives the strategy wraps around
+it) is traced under ``shard_map`` exactly like a forward ``dist_fn``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence, Union
+
+import jax
+
+from ..core.capture import Graph, SpmdCapture, capture, capture_spmd
+
+
+def grad_of(loss_fn: Callable, argnums: Union[int, Sequence[int]]
+            ) -> Callable:
+    """The gradient function of a scalar loss w.r.t. ``argnums``.
+
+    A thin, named wrapper over ``jax.grad`` so obligations read as what
+    they verify (``grad_of(loss, 2)`` = the w2 gradient of the step).
+    """
+    return jax.grad(loss_fn, argnums=argnums)
+
+
+def capture_grad(loss_fn: Callable, avals: Sequence, names: Sequence[str],
+                 wrt: Union[int, Sequence[int]]) -> Graph:
+    """Capture the backward graph of ``loss_fn`` w.r.t. ``wrt`` as a
+    sequential :class:`Graph` (the G_s of a train-step obligation)."""
+    return capture(grad_of(loss_fn, wrt), list(avals), list(names))
+
+
+def capture_grad_spmd(dist_grad_fn: Callable, mesh_axes: dict,
+                      in_specs: Sequence, avals: Sequence,
+                      names: Sequence[str]) -> SpmdCapture:
+    """Capture a per-rank gradient implementation (local backward +
+    explicit collectives) under ``shard_map`` — the G_d of a train-step
+    obligation."""
+    return capture_spmd(dist_grad_fn, mesh_axes, list(in_specs),
+                        list(avals), list(names))

@@ -1,0 +1,228 @@
+"""Scheduler: fan per-parameter gradient obligations across a pool.
+
+``check_train`` is the subsystem entry point.  Parameter obligations are
+verified either in-process or on a spawn pool with the same warmed-worker
+discipline as :class:`repro.api.Suite` / ``repro.modelcheck.schedule`` —
+workers receive only picklable ``(strategy, degree, bug, param)`` tuples
+and rebuild the obligation from the deterministic registry, so nothing
+unpicklable crosses the boundary and certificates stay byte-identical for
+any worker count.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from typing import Dict, List, Optional, Tuple
+
+from ..api.report import Report
+from ..api.runner import _engine_opts
+from ..api.spec import Degree, StrategySpec
+from ..core import RefinementError, check_refinement, expand_spmd
+from ..core.capture import capture
+from ..core.terms import pretty
+from .capture_grad import capture_grad_spmd
+from .obligations import get_train_strategy
+from .report import ParamResult, TrainReport
+from .transpose import expected_grad_relation, grad_collective
+
+DEFAULT_TIMEOUT_S = 600.0
+
+
+def _verify_param(spec: StrategySpec, param: str,
+                  engine_opts: Optional[dict] = None) -> dict:
+    """Verify one parameter's gradient obligation; returns a JSON-ready
+    nested Report dict with the transposition seam (inferred R_o vs the
+    relation the parameter's PartitionSpec transposes to) attached."""
+    # by convention the loss-data (batch) input is the obligation's first
+    # input — see register_train_strategy; its sharding determines which
+    # axes the local backward partial-sums over.  A custom strategy whose
+    # parameter is not an input degrades to an unknown collective rather
+    # than crashing the scheduler.
+    try:
+        i = spec.input_names.index(param)
+        collective, axes = grad_collective(spec.in_specs[i],
+                                           spec.in_specs[0], spec.mesh_axes)
+        coll = collective if not axes else f"{collective}({','.join(axes)})"
+        param_spec = spec.in_specs[i]
+    except ValueError:
+        coll, param_spec = "?", None
+    t0 = time.perf_counter()
+    try:
+        with _engine_opts(engine_opts) as eo:
+            # seq_fn is already grad_of(loss, param) — the sequential
+            # backward graph; the dist side traces the per-rank backward
+            # + collectives under shard_map
+            gs = capture(spec.seq_fn, list(spec.avals),
+                         list(spec.input_names))
+            cap = capture_grad_spmd(spec.dist_fn, spec.mesh_axes,
+                                    spec.in_specs, spec.avals,
+                                    spec.input_names)
+            gd, r_i = expand_spmd(cap)
+            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+    except RefinementError as e:
+        d = Report(
+            case=spec.name, degree=spec.degree, bug=spec.bug,
+            verdict="refinement_error", expected=spec.expected,
+            ok=spec.expected == "refinement_error", localization=e.payload(),
+            wall_s=round(time.perf_counter() - t0, 6)).to_json()
+        d["collective"] = coll
+        return d
+    except Exception as e:  # noqa: BLE001 — capture/engine failure -> verdict
+        d = Report(
+            case=spec.name, degree=spec.degree, bug=spec.bug,
+            verdict="error", expected=spec.expected, ok=False,
+            error=f"{type(e).__name__}: {e}",
+            wall_s=round(time.perf_counter() - t0, 6)).to_json()
+        d["collective"] = coll
+        return d
+
+    # transposition seam: the inferred gradient relation must equal the
+    # one the parameter's PartitionSpec transposes to (skipped when the
+    # parameter is not an input — no spec to transpose)
+    if param_spec is not None:
+        gd_out = gd.outputs[0]
+        expect = expected_grad_relation(
+            gd_out.split("@")[0], gd.shapes[gd_out], gd.dtypes[gd_out],
+            param_spec, spec.mesh_axes)
+        got = next(iter(cert.r_o.values()), None)
+        relation_ok = got is expect      # Terms are hash-consed: identity
+    else:
+        expect, got, relation_ok = None, None, True
+    cert_json = cert.to_json()
+    d = Report(
+        case=spec.name, degree=spec.degree, bug=spec.bug,
+        verdict="certificate", expected=spec.expected,
+        ok=spec.expected == "certificate" and relation_ok,
+        r_o=cert_json["r_o"], stats=cert_json["stats"],
+        wall_s=round(time.perf_counter() - t0, 6)).to_json()
+    d["collective"] = coll
+    d["relation"] = {
+        "ok": relation_ok,
+        "expected": None if expect is None else pretty(expect, 999),
+        "got": None if got is None else pretty(got, 999)}
+    return d
+
+
+def _pool_task(strategy: str, degree: Degree, bug: Optional[str],
+               param: str, engine_opts: Optional[dict]) -> Tuple[str, dict]:
+    """Pool worker: rebuild the obligation by name and verify it."""
+    spec = get_train_strategy(strategy).build(degree=degree, bug=bug)[param]
+    return param, _verify_param(spec, param, engine_opts)
+
+
+def run_train_obligations(strategy: str, degree: Degree,
+                          bug: Optional[str] = None,
+                          workers: Optional[int] = None,
+                          engine_opts: Optional[dict] = None,
+                          timeout_s: float = DEFAULT_TIMEOUT_S
+                          ) -> Tuple[Dict[str, dict], int]:
+    """Verify every parameter obligation; returns
+    ``({param: report dict}, workers actually used)``."""
+    entry = get_train_strategy(strategy)
+    specs = entry.build(degree=degree, bug=bug)
+    params = list(specs)
+    if workers is None:
+        # sub-second obligations, small count: in-process beats pool spin-up
+        workers = min(4, len(params)) if len(params) > 4 else 1
+    reports: Dict[str, dict] = {}
+    if workers < 2:
+        for param in params:
+            reports[param] = _verify_param(specs[param], param, engine_opts)
+        return reports, 1
+
+    import multiprocessing
+
+    from ..api.suite import _warm_worker, terminate_pool
+    # spawn, not fork: the parent has traced jax by now (see modelcheck)
+    ctx = multiprocessing.get_context("spawn")
+    pool = ProcessPoolExecutor(max_workers=min(workers, len(params)),
+                               mp_context=ctx, initializer=_warm_worker)
+    try:
+        futs = {param: pool.submit(_pool_task, strategy, degree, bug,
+                                   param, engine_opts)
+                for param in params}
+        deadline = time.monotonic() + timeout_s
+        for param, fut in futs.items():
+            try:
+                _, reports[param] = fut.result(
+                    timeout=max(deadline - time.monotonic(), 0.001))
+            except FutureTimeoutError:
+                fut.cancel()
+                spec = specs[param]
+                reports[param] = Report(
+                    case=spec.name, degree=spec.degree, bug=spec.bug,
+                    verdict="timeout", expected=spec.expected, ok=False,
+                    error=f"exceeded gradcheck budget of {timeout_s}s",
+                    wall_s=timeout_s).to_json()
+            except Exception:  # noqa: BLE001 — broken worker: run in-process
+                reports[param] = _verify_param(specs[param], param,
+                                               engine_opts)
+    finally:
+        terminate_pool(pool)
+    return reports, min(workers, len(params))
+
+
+def check_train(strategy: str, *, degree: Optional[Degree] = None,
+                bug: Optional[str] = None, workers: Optional[int] = None,
+                engine_opts: Optional[dict] = None,
+                timeout_s: float = DEFAULT_TIMEOUT_S) -> TrainReport:
+    """Train-step refinement check: one obligation per parameter, stitched.
+
+    Returns a :class:`TrainReport`; never raises on verification failures
+    (they become parameter verdicts) — only on caller mistakes (unknown
+    strategy / bug / degree).
+    """
+    t0 = time.perf_counter()
+    entry = get_train_strategy(strategy)
+    if degree is None:
+        degree = entry.degrees[0]
+    degree = entry.validate_degree(degree)
+    if bug is not None and bug not in entry.bug_names():
+        raise ValueError(
+            f"bug `{bug}` is not hosted by train strategy `{strategy}` "
+            f"(hosted: {sorted(entry.bug_names()) or '-'})")
+    reports, used = run_train_obligations(
+        strategy, degree, bug=bug, workers=workers,
+        engine_opts=engine_opts, timeout_s=timeout_s)
+
+    params: List[ParamResult] = []
+    failing: List[str] = []
+    for param in entry.params:
+        rep = reports[param]
+        rel = rep.get("relation") or {}
+        relation_ok = bool(rel.get("ok")) if rel else \
+            rep["verdict"] == "certificate"
+        loc = rep.get("localization") or {}
+        params.append(ParamResult(
+            param=param, verdict=rep["verdict"], relation_ok=relation_ok,
+            collective=rep.get("collective", "?"),
+            localized_op=loc.get("op_name")))
+        if rep["verdict"] != "certificate" or not relation_ok:
+            failing.append(param)
+
+    verdicts = {p.verdict for p in params}
+    if verdicts & {"error", "timeout"}:
+        verdict = "error"
+    elif "refinement_error" in verdicts:
+        verdict = "refinement_error"
+    elif any(not p.relation_ok for p in params):
+        verdict = "unexpected_relation"
+    else:
+        verdict = "certificate"
+
+    bug_param = entry.bug_params.get(bug) if bug else None
+    if bug is None:
+        ok = verdict == "certificate"
+    else:
+        # the injected gradient bug must surface the way its BugSpec
+        # declares (refinement_error raise, or unexpected_relation via
+        # the transposition seam) AND localize to exactly its parameter
+        ok = (verdict == entry.bug_spec(bug).expected
+              and failing == [bug_param])
+
+    return TrainReport(
+        strategy=strategy, degree=degree, verdict=verdict, ok=ok,
+        params=params, reports=dict(reports), failing_params=failing,
+        bug=bug, bug_param=bug_param,
+        wall_s=round(time.perf_counter() - t0, 6), workers=used)

@@ -11,13 +11,21 @@ block decomposition with obligation dedup):
     python -m repro.launch.verify --model gpt --plan dp2xtp2 \
         [--inject-bug wrong_spec [--bug-layer 3]] [--workers 4] [--json]
 
+Training-step verification (the ``repro.gradcheck`` subsystem —
+per-parameter gradient obligations, relations transposed from the
+forward specs):
+
+    python -m repro.launch.verify --train dp_accum \
+        [--inject-bug accum_no_rescale] [--degree 2] [--workers 2] [--json]
+
 The case matrix lives in the ``repro.api`` registry (populated by
 ``repro.dist.strategies``); model-level tasks resolve through
-``repro.modelcheck``.  ``--list`` prints both.  ``--json`` emits the
-structured report (a ``repro.api.Report`` or ``ModelReport``) wrapped in a
-stable envelope carrying ``schema_version`` and per-phase ``timing`` stats
-so downstream tooling can gate on it.  For matrix runs use the suite
-runner: ``python -m repro.api``.
+``repro.modelcheck`` and train-step tasks through ``repro.gradcheck``.
+``--list`` prints all three with a kind tag per entry.  ``--json`` emits
+the structured report (a ``repro.api.Report``, ``ModelReport``, or
+``TrainReport``) wrapped in a stable envelope carrying ``schema_version``
+and per-phase ``timing`` stats so downstream tooling can gate on it.  For
+matrix runs use the suite runner: ``python -m repro.api``.
 """
 from __future__ import annotations
 
@@ -26,8 +34,8 @@ import json
 import sys
 
 from ..api import (build_spec, degree_token, get_strategy, list_bugs,
-                   list_model_tasks, list_strategies, parse_degree, run_spec,
-                   verify)
+                   list_model_tasks, list_strategies, list_train_tasks,
+                   parse_degree, run_spec, verify)
 from ..core import RefinementError
 from ..dist.strategies import STRATEGY_CASES as CASES  # legacy view re-export
 
@@ -51,19 +59,39 @@ def run_case(case: str, bug=None, degree: int = 2, max_nodes=400_000,
 
 
 def _print_registry():
-    print("registered cases (repro.api registry):")
+    """One line per registered task, each tagged by kind:
+
+    ``[case]`` single-layer strategies (``--case``), ``[model]``
+    whole-model tasks (``--model``/``--plan``), ``[train]`` training-step
+    tasks (``--train``) — the three task registries side by side.
+    """
+    from ..gradcheck import get_train_strategy, list_train_bugs
+
+    print("registered tasks (kind-tagged; see --case / --model / --train):")
     for name in list_strategies():
         entry = get_strategy(name)
         bugs = ", ".join(entry.bug_names()) or "-"
         degs = "/".join(degree_token(d) for d in entry.degrees)
-        print(f"  {name:12s} degrees={degs:8s} expected={entry.expected:12s} "
-              f"bugs: {bugs}")
-    print("registered bugs (bug -> host case, detection):")
-    for bug, (host, bspec) in sorted(list_bugs().items()):
-        print(f"  {bug:16s} -> {host:12s} ({bspec.expected})")
-    print("model-level tasks (repro.modelcheck; --model M --plan P):")
+        print(f"  [case]  {name:16s} degrees={degs:10s} "
+              f"expected={entry.expected:12s} bugs: {bugs}")
     for task in list_model_tasks():
-        print(f"  {task}")
+        model, _, plan = task.partition("@")
+        print(f"  [model] {task:16s} (--model {model} --plan {plan})")
+    for task in list_train_tasks():
+        entry = get_train_strategy(task.partition("@")[2])
+        bugs = ", ".join(entry.bug_names()) or "-"
+        degs = "/".join(degree_token(d) for d in entry.degrees)
+        print(f"  [train] {task:16s} degrees={degs:10s} "
+              f"params={','.join(entry.params):8s} bugs: {bugs}")
+    from ..modelcheck.decompose import BUGS as MODEL_BUGS
+
+    print("registered bugs (bug -> host, detection):")
+    for bug, (host, bspec) in sorted(list_bugs().items()):
+        print(f"  [case]  {bug:22s} -> {host:12s} ({bspec.expected})")
+    for bug in MODEL_BUGS:
+        print(f"  [model] {bug:22s} -> --model tasks (refinement_error)")
+    for bug, (host, bspec) in sorted(list_train_bugs().items()):
+        print(f"  [train] {bug:22s} -> train@{host:12s} ({bspec.expected})")
 
 
 def _json_envelope(kind: str, report_json: dict, timing: dict) -> str:
@@ -118,6 +146,39 @@ def _run_model(args) -> int:
     return 0 if report.ok else 1
 
 
+def _run_train(args) -> int:
+    from ..gradcheck import check_train
+    try:
+        report = check_train(args.train, degree=args.degree,
+                             bug=args.inject_bug, workers=args.workers)
+    except (KeyError, ValueError) as e:
+        print(f"[gradcheck] {e}", file=sys.stderr)
+        return 2
+    if args.json:
+        print(_json_envelope("train", report.to_json(), report.timing()))
+    else:
+        print(report.to_markdown())
+        if report.verdict == "certificate":
+            print(f"TRAIN-STEP REFINEMENT HOLDS ({len(report.params)} "
+                  f"parameter gradients verified, relations transposed "
+                  f"from the forward specs)")
+        else:
+            print(f"TRAIN-STEP VERDICT: {report.verdict} — failing "
+                  f"parameters {report.failing_params}")
+    # exit codes mirror the model path: 0 clean certificate; 1 expected
+    # failure (injected gradient bug detected AND localized to its
+    # parameter — report.ok encodes that); 2 a harness problem, so CI
+    # gates that assert rc==1 catch mis-localization.
+    if args.inject_bug is not None:
+        if not report.ok:
+            print(f"[gradcheck] injected bug NOT correctly localized "
+                  f"(expected parameter {report.bug_param!r}, failing "
+                  f"parameters {report.failing_params})", file=sys.stderr)
+            return 2
+        return 1
+    return 0 if report.ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--case", default=None, choices=list_strategies(),
@@ -125,21 +186,36 @@ def main(argv=None):
                          "unless --model is given)")
     ap.add_argument("--bug", default=None, choices=sorted(list_bugs()),
                     help="inject a bug class (must be hosted by --case)")
-    ap.add_argument("--degree", type=parse_degree, default=2,
-                    help="int, or per-mesh-axis like `4x2` for 2D cases")
+    from ..gradcheck import list_train_bugs, list_train_strategies
+    from ..modelcheck.decompose import BUGS as model_bugs
+    train_bugs = sorted(list_train_bugs())
+    ap.add_argument("--degree", type=parse_degree, default=None,
+                    help="int, or per-mesh-axis like `4x2` for 2D cases "
+                         "(default: 2 for --case, the strategy's first "
+                         "registered degree for --train)")
     ap.add_argument("--model", default=None,
                     help="whole-model verification: a model id like `gpt` "
                          "(see --list)")
     ap.add_argument("--plan", default="dp2xtp2",
                     help="mesh plan for --model, e.g. dp2 / tp2 / dp2xtp2")
-    ap.add_argument("--inject-bug", default=None, choices=("wrong_spec",),
-                    help="inject a whole-model bug into one layer")
+    ap.add_argument("--train", default=None,
+                    choices=list_train_strategies(),
+                    help="training-step verification: a train strategy "
+                         "like `dp_accum` (see --list)")
+    ap.add_argument("--inject-bug", default=None,
+                    choices=tuple(model_bugs) + tuple(train_bugs),
+                    help="inject a whole-model bug into one layer "
+                         "(--model) or a gradient bug into one parameter "
+                         "(--train)")
     ap.add_argument("--bug-layer", type=int, default=None,
-                    help="layer index for --inject-bug (default: middle)")
+                    help="layer index for --model --inject-bug "
+                         "(default: middle)")
     ap.add_argument("--workers", type=int, default=None,
-                    help="process-pool size for --model (default: auto)")
+                    help="process-pool size for --model/--train "
+                         "(default: auto)")
     ap.add_argument("--list", action="store_true",
-                    help="print registered cases/bugs/model tasks and exit")
+                    help="print registered case/model/train tasks and "
+                         "bugs (kind-tagged) and exit")
     ap.add_argument("--json", action="store_true",
                     help="emit the structured report as JSON (with "
                          "schema_version + per-phase timing)")
@@ -147,19 +223,39 @@ def main(argv=None):
     if args.list:
         _print_registry()
         return
+    if args.model is not None and args.train is not None:
+        ap.error("--model and --train are separate paths")
     if args.model is not None:
         if args.case is not None or args.bug is not None:
             ap.error("--model/--plan and --case/--bug are separate paths")
+        if args.inject_bug in train_bugs:
+            ap.error(f"--inject-bug {args.inject_bug} is a gradient bug — "
+                     f"it requires --train")
         rc = _run_model(args)
+        if rc:
+            sys.exit(rc)
+        return
+    if args.train is not None:
+        if args.case is not None or args.bug is not None:
+            ap.error("--train and --case/--bug are separate paths")
+        if args.inject_bug in model_bugs:
+            ap.error(f"--inject-bug {args.inject_bug} is a whole-model "
+                     f"bug — it requires --model")
+        if args.bug_layer is not None:
+            ap.error("--bug-layer applies to --model (gradient bugs "
+                     "localize to a parameter, not a layer)")
+        rc = _run_train(args)
         if rc:
             sys.exit(rc)
         return
     if args.inject_bug is not None or args.bug_layer is not None \
             or args.workers is not None:
-        ap.error("--inject-bug/--bug-layer/--workers require --model "
-                 "(the case path takes --bug)")
+        ap.error("--inject-bug/--bug-layer/--workers require --model or "
+                 "--train (the case path takes --bug)")
     if args.case is None:
         args.case = "tp_layer"
+    if args.degree is None:
+        args.degree = 2
     if args.json:
         report = verify(args.case, degree=args.degree, bug=args.bug)
         print(_json_envelope("case", report.to_json(),

@@ -140,7 +140,7 @@ def run_obligations(dec: Decomposition, workers: Optional[int] = None,
 
     import multiprocessing
 
-    from ..api.suite import _warm_worker
+    from ..api.suite import _warm_worker, terminate_pool
     # spawn, not fork: by the time a whole-model check runs, the parent
     # process has usually executed jax/pallas work and forking its
     # multithreaded state can deadlock the child mid-trace.  Obligations
@@ -175,11 +175,7 @@ def run_obligations(dec: Decomposition, workers: Optional[int] = None,
                     ob, _task_name(dec, key), _expected_for(ob),
                     engine_opts)
     finally:
-        procs = list(getattr(pool, "_processes", {}).values())
-        pool.shutdown(wait=False, cancel_futures=True)
-        for p in procs:
-            if p.is_alive():
-                p.terminate()
+        terminate_pool(pool)
     return reports, min(workers, len(keys))
 
 

@@ -37,8 +37,10 @@ def test_registry_covers_paper_matrix():
                              "ln_no_allreduce", "stale_shard",
                              "rs_wrong_axis", "drop_microbatch",
                              "psum_wrong_axis"}
-    # the 2D-mesh case declares per-axis tuple degrees
-    assert get_strategy("tp_dp_2d").degrees == ((2, 2), (2, 4), (4, 2))
+    # the 2D-mesh case declares per-axis tuple degrees, incl. the 16-rank
+    # (4, 4) mesh the n-ary add normal form made tractable
+    assert get_strategy("tp_dp_2d").degrees == ((2, 2), (2, 4), (4, 2),
+                                                (4, 4))
 
 
 def test_duplicate_registration_raises():
@@ -188,7 +190,8 @@ def test_suite_sweeps_tuple_degrees_from_registry():
     ids = [t.task_id() for t in tasks]
     assert ids == ["tp_dp_2d@deg2x2", "tp_dp_2d@deg2x2+psum_wrong_axis",
                    "tp_dp_2d@deg2x4", "tp_dp_2d@deg2x4+psum_wrong_axis",
-                   "tp_dp_2d@deg4x2", "tp_dp_2d@deg4x2+psum_wrong_axis"]
+                   "tp_dp_2d@deg4x2", "tp_dp_2d@deg4x2+psum_wrong_axis",
+                   "tp_dp_2d@deg4x4", "tp_dp_2d@deg4x4+psum_wrong_axis"]
 
 
 # ---------------------------------------------------------------------------
@@ -227,10 +230,11 @@ def test_tp_dp_2d_wrong_axis_detected():
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("degree", [(2, 4), (4, 2)])
+@pytest.mark.parametrize("degree", [(2, 4), (4, 2), (4, 4)])
 def test_tp_dp_2d_degree4_axes(degree):
-    """Degree 4 on either mesh axis certifies and catches the wrong-axis
-    psum ((4, 4) is a documented scale gap — see EXPERIMENTS.md)."""
+    """Degree 4 on either (or both) mesh axes certifies and catches the
+    wrong-axis psum — (4, 4) was a scale gap until the n-ary add normal
+    form replaced assoc/comm saturation."""
     clean = verify("tp_dp_2d", degree=degree)
     assert clean.ok and clean.verdict == "certificate"
     bug = verify("tp_dp_2d", degree=degree, bug="psum_wrong_axis")

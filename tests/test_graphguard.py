@@ -32,9 +32,10 @@ def _run(case, bug=None, degree=2):
 # ---------------------------------------------------------------------------
 
 CLEAN_CASES = ["tp_layer", "sp_pad", "ep_moe", "sp_moe", "ln_grad",
-               "sp_rope", "aux_loss"]
-# Known completeness gaps (sound: false alarms only — paper §3.3 trade):
-INCOMPLETE_CLEAN = ["grad_accum"]
+               "sp_rope", "aux_loss", "grad_accum"]
+# grad_accum was the last documented completeness gap; the constrained
+# dus_concat lemma closed it (EXPERIMENTS.md §Gaps), retiring the old
+# test_incomplete_clean_case xfail.
 
 
 @pytest.mark.parametrize("case", CLEAN_CASES)
@@ -43,13 +44,6 @@ def test_clean_case_certificate(case):
     assert cert.r_o, case
     for expr in cert.r_o.values():
         assert expr.is_clean()
-
-
-@pytest.mark.parametrize("case", INCOMPLETE_CLEAN)
-@pytest.mark.xfail(reason="documented completeness gap (sound false alarm); "
-                          "see EXPERIMENTS.md §Verification", strict=False)
-def test_incomplete_clean_case(case):
-    _run(case)
 
 
 def test_certificate_numeric_replay_tp():
@@ -275,6 +269,76 @@ else:  # pragma: no cover — visible skip so the gap is not silent
                              "requirements-dev.txt)")
     def test_property_suite_requires_hypothesis():
         pass
+
+
+def test_nary_add_normal_form():
+    """The flattened n-ary add normal form replaces assoc/comm saturation:
+    any binary grouping and any permutation of the same addends meet in
+    one canonical class — without generative regrouping."""
+    eg = EGraph()
+    a = T.tensor("a@d", (2,)); b = T.tensor("b@d", (2,)); c = T.tensor("c@d", (2,))
+    c1 = eg.add_term(T.add(T.add(a, b), c))          # ((a+b)+c)
+    c2 = eg.add_term(T.add(a, T.add(c, b)))          # (a+(c+b))
+    c3 = eg.add_term(T.add_n([c, b, a]))             # flat, permuted
+    eg.rebuild()
+    eg.saturate(all_lemmas())
+    assert eg.find(c1) == eg.find(c2) == eg.find(c3)
+    ce = eg.extract_clean(c1, lambda n: n.endswith("@d"))
+    assert ce is not None and ce.op == "add"
+    # extraction prefers the flat n-ary node (one op) to a binary chain
+    assert len(ce.args) == 3
+
+
+def test_add_n_flattens_and_evaluates():
+    """add_n builds the flat normal form at construction and eval_term
+    handles arbitrary arity."""
+    xs = [T.tensor(f"x{i}", (3,)) for i in range(5)]
+    t = T.add_n([T.add(xs[0], xs[1]), xs[2], T.add_n(xs[3:])])
+    assert t.op == "add" and len(t.args) == 5        # fully flattened
+    env = {f"x{i}": np.full((3,), float(i)) for i in range(5)}
+    np.testing.assert_allclose(eval_term(t, env), np.full((3,), 10.0))
+    assert T.add_n([xs[0]]) is xs[0]                 # 1-ary collapses
+
+
+def test_dus_concat_lemma():
+    """A complete dus chain over a zero-init buffer rewrites as the concat
+    of its updates (the grad_accum gap closer) — and an *incomplete* chain
+    does not."""
+    eg = EGraph()
+    zeros = T.broadcast(T.lit(0.0), (4, 3), ())
+    u0 = T.tensor("u0@d", (2, 3)); u1 = T.tensor("u1@d", (2, 3))
+    full = T.dus(T.dus(zeros, u0, (0, 0)), u1, (2, 0))
+    c_full = eg.add_term(full)
+    partial = T.dus(zeros, u0, (0, 0))               # half-covered buffer
+    c_part = eg.add_term(partial)
+    eg.rebuild()
+    eg.saturate(all_lemmas())
+    ce = eg.extract_clean(c_full, lambda n: n.endswith("@d"))
+    assert ce is not None and ce.op == "concat"
+    assert [a.name for a in ce.args] == ["u0@d", "u1@d"]
+    assert eg.extract_clean(c_part, lambda n: n.endswith("@d")) is None
+    # numeric soundness of the rewrite
+    env = {"u0@d": np.ones((2, 3)), "u1@d": 2 * np.ones((2, 3))}
+    np.testing.assert_allclose(eval_term(ce, env), eval_term(full, env))
+
+
+def test_dus_concat_rejects_full_buffer_write():
+    """Soundness regression: a chain whose head write covers the *full*
+    buffer must NOT rewrite as a concat of the (dead) inner tiles — the
+    buffer's value is just the head update (dus_full's job)."""
+    eg = EGraph()
+    zeros = T.broadcast(T.lit(0.0), (2, 4), ())
+    u1 = T.tensor("u1@d", (2, 2))
+    u_full = T.tensor("uf@d", (2, 4))
+    chain = T.dus(T.dus(zeros, u1, (0, 2)), u_full, (0, 0))
+    c = eg.add_term(chain)
+    eg.rebuild()
+    eg.saturate(all_lemmas())
+    ce = eg.extract_clean(c, lambda n: n.endswith("@d"))
+    # dus_full rewrites the head to u_full; no concat may survive
+    assert ce is not None and ce.op == "tensor" and ce.name == "uf@d"
+    env = {"u1@d": np.ones((2, 2)), "uf@d": 7 * np.ones((2, 4))}
+    np.testing.assert_allclose(eval_term(ce, env), eval_term(chain, env))
 
 
 def test_reduce_reshape_lemma():
