@@ -4,7 +4,7 @@ PY ?= python
 PYTEST ?= $(PY) -m pytest
 
 .PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden \
-	modelcheck-smoke gradcheck-smoke
+	modelcheck-smoke gradcheck-smoke chaos-smoke cache-smoke
 
 # tier-1 gate: full test suite
 verify:
@@ -58,3 +58,16 @@ gradcheck-smoke:
 	PYTHONPATH=src $(PY) -m repro.launch.verify --train dp_accum
 	PYTHONPATH=src $(PY) -m repro.launch.verify --train dp_accum \
 		--inject-bug accum_no_rescale; test $$? -eq 1
+
+# fault-tolerance gate: inject worker crashes / hard exits / hangs / cache
+# corruption (GRAPHGUARD_CHAOS) and assert every fault is contained,
+# attributed to exactly the afflicted task, and survived with byte-identical
+# certificates for everything else
+chaos-smoke:
+	PYTHONPATH=src $(PY) scripts/chaos_smoke.py
+
+# persistent-cache gate: cold run commits, warm run serves byte-identical
+# certificates from the journal, a torn tail line is recovered and only
+# that entry re-proved
+cache-smoke:
+	PYTHONPATH=src $(PY) scripts/cache_smoke.py

@@ -8,6 +8,8 @@
             (repro.gradcheck per-parameter gradient obligations)
   suite     repro.api.Suite process-pool runner vs sequential
             run_case looping on the clean degree-2 matrix
+  runtime   persistent certificate cache: cold vs warm whole-model
+            re-verification (repro.runtime.cache)
   ablation  sp_moe deg 8: optimized engine vs the same commit
             with dispatch/extraction optimizations disabled
   fig6      lemma-library effort: count + complexity          (paper Fig. 6)
@@ -257,6 +259,53 @@ def suite_runner(rows, out, repeats=None):
                  int(100 * seq_ms / par_ms)))
 
 
+def runtime_bench(rows, out, repeats=None):
+    """Persistent certificate cache (repro.runtime.cache): cold vs warm
+    whole-model re-verification of gpt@dp2xtp2.  The warm number is the
+    latency of re-verifying an unchanged model from the journal — the
+    pre-launch hot path the cache exists for — and is gated by
+    scripts/check_bench.py.  Each repeat uses a fresh cache directory so
+    colds stay cold; asserts the warm run is all hits before timing
+    counts."""
+    import shutil
+    import statistics as _st
+    import tempfile
+
+    from repro.modelcheck import check_model
+    repeats = repeats or REPEATS
+    sec = out.setdefault("runtime", {})
+    colds, warms, hits = [], [], 0
+    for _ in range(repeats):
+        d = tempfile.mkdtemp(prefix="graphguard-bench-cache-")
+        try:
+            t0 = time.perf_counter()
+            cold = check_model("gpt", "dp2xtp2", workers=0, cache=d)
+            colds.append((time.perf_counter() - t0) * 1e3)
+            assert cold.verdict == "certificate" \
+                and cold.cache["hits"] == 0, \
+                f"cold run not clean: {cold.verdict}, {cold.cache}"
+            t0 = time.perf_counter()
+            warm = check_model("gpt", "dp2xtp2", workers=0, cache=d)
+            warms.append((time.perf_counter() - t0) * 1e3)
+            assert warm.cache["misses"] == 0, \
+                f"warm run missed the cache: {warm.cache}"
+            assert cold.stable_summary() == warm.stable_summary(), \
+                "warm certificates differ from cold"
+            hits = warm.cache["hits"]
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    cold_ms, warm_ms = _st.median(colds), _st.median(warms)
+    sec["gpt@dp2xtp2"] = {
+        "cold_wall_ms": round(cold_ms, 3),
+        "warm_wall_ms": round(warm_ms, 3),
+        "obligations": hits,
+        "speedup": round(cold_ms / max(warm_ms, 1e-9), 2),
+        "results_identical": True,
+    }
+    rows.append(("runtime/gpt@dp2xtp2/cold", cold_ms * 1e3, hits))
+    rows.append(("runtime/gpt@dp2xtp2/warm", warm_ms * 1e3, hits))
+
+
 def ablation_engine(rows, out, repeats=None):
     """sp_moe at degree 8: optimized engine vs the un-optimized baseline
     (op-indexed dispatch, deferred rebuild, incremental extraction, indexed
@@ -394,9 +443,10 @@ def main(argv=None) -> None:
         lambda: fig5_scaling(rows, out, repeats),
         lambda: modelcheck_bench(rows, out, repeats),
         lambda: gradcheck_bench(rows, out, repeats),
+        lambda: runtime_bench(rows, out, repeats),
     ]
     names = ["fig4_verification_time", "fig5_scaling", "modelcheck_bench",
-             "gradcheck_bench"]
+             "gradcheck_bench", "runtime_bench"]
     if not args.smoke:
         sections += [
             lambda: fam_scaling(rows, out, repeats),

@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Persistent-cache smoke — cold vs warm re-verification
+(``make cache-smoke``; see ``repro.runtime.cache``).
+
+Asserts the cache's contract end to end on real verification work:
+
+* a cold suite run commits every deterministic verdict (all misses);
+* a warm re-run serves every task from the journal (all hits) with
+  byte-identical stable summaries (verdicts + R_o certificates);
+* a torn tail line (the crash-mid-append case) is skipped on reload and
+  only that entry is re-proved;
+* the whole-model path (``gpt@dp2xtp2``) re-verifies warm via
+  ``canonical_key`` content addressing, and the measured cold/warm walls
+  are printed for EXPERIMENTS.md.
+
+Exit code 0 only if every assertion holds.
+"""
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.abspath(__file__)), "..", "src"))
+
+from repro.api import Suite  # noqa: E402
+from repro.runtime import CertificateCache  # noqa: E402
+
+CASES = ("tp_layer", "sp_rope", "ep_moe", "sp_moe")
+DEGREES = (2,)
+WORKERS = 2
+
+_failures = []
+
+
+def check(cond, what):
+    tag = "ok" if cond else "FAIL"
+    print(f"[cache-smoke]   {tag}: {what}")
+    if not cond:
+        _failures.append(what)
+
+
+def run_suite(cache):
+    with Suite(cases=CASES, degrees=DEGREES) as suite:
+        return suite.run(workers=WORKERS, timeout_s=60.0, cache=cache)
+
+
+def main():
+    os.environ.pop("GRAPHGUARD_CHAOS", None)
+    cache_dir = tempfile.mkdtemp(prefix="graphguard-cache-smoke-")
+    try:
+        n = len(CASES)
+        print(f"[cache-smoke] suite: {n} cases @ deg2, cache {cache_dir}")
+        cold = run_suite(cache_dir)
+        check(cold.ok, "cold run verifies cleanly")
+        check(cold.cache["misses"] == n and cold.cache["hits"] == 0,
+              f"cold run commits everything (misses={cold.cache['misses']})")
+
+        warm = run_suite(cache_dir)
+        check(warm.cache["hits"] == n and warm.cache["misses"] == 0,
+              f"warm run all hits (hits={warm.cache['hits']})")
+        check(json.dumps(cold.stable_summary(), sort_keys=True)
+              == json.dumps(warm.stable_summary(), sort_keys=True),
+              "warm certificates byte-identical to cold")
+
+        # crash-mid-append: tear the journal's last line in half — the
+        # reload must skip it and the next run re-proves only that entry
+        journal = os.path.join(cache_dir, "journal.jsonl")
+        with open(journal, "rb") as f:
+            lines = f.readlines()
+        with open(journal, "wb") as f:
+            f.writelines(lines[:-1])
+            f.write(lines[-1][:len(lines[-1]) // 2])
+        cache = CertificateCache(cache_dir)
+        check(cache.recovered_corrupt == 1,
+              f"torn tail line skipped on reload "
+              f"({cache.recovered_corrupt} recovered)")
+        resumed = run_suite(cache)
+        check(resumed.cache["hits"] == n - 1
+              and resumed.cache["misses"] == 1,
+              f"resume re-proves only the torn entry "
+              f"(hits={resumed.cache['hits']}, "
+              f"misses={resumed.cache['misses']})")
+        check(json.dumps(cold.stable_summary(), sort_keys=True)
+              == json.dumps(resumed.stable_summary(), sort_keys=True),
+              "resumed certificates byte-identical to cold")
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    # whole-model path: obligation-level content addressing
+    from repro.modelcheck import check_model
+    model_dir = tempfile.mkdtemp(prefix="graphguard-cache-smoke-model-")
+    try:
+        print("[cache-smoke] modelcheck: gpt@dp2xtp2 cold vs warm")
+        t0 = time.perf_counter()
+        cold_m = check_model("gpt", "dp2xtp2", cache=model_dir)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm_m = check_model("gpt", "dp2xtp2", cache=model_dir)
+        warm_s = time.perf_counter() - t0
+        check(cold_m.verdict == "certificate" and cold_m.cache["hits"] == 0,
+              f"cold model check proves all "
+              f"{cold_m.cache['misses']} obligations")
+        check(warm_m.verdict == "certificate"
+              and warm_m.cache["misses"] == 0
+              and warm_m.cache["hits"] == cold_m.cache["misses"],
+              f"warm model check all hits (hits={warm_m.cache['hits']})")
+        check(json.dumps(cold_m.stable_summary(), sort_keys=True)
+              == json.dumps(warm_m.stable_summary(), sort_keys=True),
+              "warm model verdicts byte-identical to cold")
+        print(f"[cache-smoke] gpt@dp2xtp2 wall: cold {cold_s*1e3:.0f} ms, "
+              f"warm {warm_s*1e3:.0f} ms "
+              f"({cold_s / max(warm_s, 1e-9):.1f}x)")
+    finally:
+        shutil.rmtree(model_dir, ignore_errors=True)
+
+    if _failures:
+        print(f"[cache-smoke] FAILED: {len(_failures)} assertion(s):")
+        for f in _failures:
+            print(f"  - {f}")
+        return 1
+    print("[cache-smoke] PASS: cold commits, warm hits, torn entries "
+          "recovered, certificates byte-identical throughout")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

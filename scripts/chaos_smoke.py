@@ -1,0 +1,154 @@
+#!/usr/bin/env python
+"""Chaos smoke — prove the runtime's fault tolerance instead of asserting
+it (``make chaos-smoke``; see ``repro.runtime.chaos``).
+
+For each injected fault class the driver runs the same small suite matrix
+under ``GRAPHGUARD_CHAOS`` and asserts the runtime's contract:
+
+* the run completes and every task has a result (no lost tasks, no
+  crashed driver);
+* the afflicted task *alone* carries the fault verdict, with the cause
+  attributed in its error string (``timeout`` + budget/heartbeat detail
+  for hangs; ``error`` + worker exit cause for crashes/hard exits);
+* every unafflicted task's certificate is byte-identical to the
+  fault-free baseline;
+* a cache entry corrupted on commit is skipped and re-proved on the next
+  run (``recovered_corrupt``), while undamaged entries hit.
+
+Exit code 0 only if every assertion holds.
+"""
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.abspath(__file__)), "..", "src"))
+
+from repro.api import Suite  # noqa: E402
+from repro.runtime import CertificateCache  # noqa: E402
+from repro.runtime.chaos import ENV_SEED, ENV_SPEC, ENV_TARGET  # noqa: E402
+
+CASES = ("tp_layer", "sp_rope", "ep_moe", "sp_moe")
+DEGREES = (2,)
+WORKERS = 2
+BUDGET_S = 20.0                          # generous for clean sub-second
+HANG_BUDGET_S = 4.0                      # tasks; tight for the hang run
+
+_failures = []
+
+
+def check(cond, what):
+    tag = "ok" if cond else "FAIL"
+    print(f"[chaos-smoke]   {tag}: {what}")
+    if not cond:
+        _failures.append(what)
+
+
+def set_chaos(spec=None, target=""):
+    for var in (ENV_SPEC, ENV_TARGET, ENV_SEED):
+        os.environ.pop(var, None)
+    if spec is not None:
+        os.environ[ENV_SPEC] = spec
+        os.environ[ENV_TARGET] = target
+
+
+def run_suite(timeout_s=BUDGET_S, cache=None):
+    with Suite(cases=CASES, degrees=DEGREES) as suite:
+        return suite.run(workers=WORKERS, timeout_s=timeout_s,
+                         cache=cache if cache is not None else False)
+
+
+def survivors_identical(baseline, result, victim):
+    """Every non-victim task must match the baseline byte for byte
+    (verdict, expectation, and the full R_o certificate strings)."""
+    base, got = baseline.stable_summary(), result.stable_summary()
+    clean = [k for k in base if k != victim]
+    same = all(json.dumps(base[k], sort_keys=True)
+               == json.dumps(got[k], sort_keys=True) for k in clean)
+    check(same, f"{len(clean)} unafflicted tasks byte-identical to baseline")
+
+
+def main():
+    set_chaos(None)
+    print(f"[chaos-smoke] baseline: {len(CASES)} cases @ deg2, "
+          f"{WORKERS} workers")
+    baseline = run_suite()
+    check(baseline.ok, "fault-free baseline is clean")
+
+    victim = f"{CASES[0]}@deg2"
+
+    print(f"[chaos-smoke] crash:1 targeting {victim} (SIGSEGV on every "
+          f"attempt)")
+    set_chaos("crash:1", victim)
+    res = run_suite()
+    rep = {r.task_id(): r for r in res}[victim]
+    check(len(res) == len(baseline), "every task has a result")
+    check(rep.verdict == "error", f"victim verdict is error "
+                                  f"(got {rep.verdict})")
+    check("SIGSEGV" in (rep.error or ""),
+          f"exit cause attributed in error: {rep.error!r}")
+    check((rep.runtime or {}).get("attempts", 1) > 1,
+          f"bounded retries recorded: {rep.runtime}")
+    survivors_identical(baseline, res, victim)
+
+    print(f"[chaos-smoke] exit:1 targeting {victim} (hard os._exit "
+          f"mid-task)")
+    set_chaos("exit:1", victim)
+    res = run_suite()
+    rep = {r.task_id(): r for r in res}[victim]
+    check(rep.verdict == "error", f"victim verdict is error "
+                                  f"(got {rep.verdict})")
+    check("exit code 3" in (rep.error or ""),
+          f"exit cause attributed in error: {rep.error!r}")
+    survivors_identical(baseline, res, victim)
+
+    print(f"[chaos-smoke] hang:1 targeting {victim} "
+          f"({HANG_BUDGET_S:g}s budget)")
+    set_chaos("hang:1", victim)
+    res = run_suite(timeout_s=HANG_BUDGET_S)
+    rep = {r.task_id(): r for r in res}[victim]
+    check(rep.verdict == "timeout", f"victim verdict is timeout "
+                                    f"(got {rep.verdict})")
+    check("budget" in (rep.error or ""),
+          f"budget overrun attributed in error: {rep.error!r}")
+    check(rep.wall_s >= HANG_BUDGET_S * 0.9,
+          f"measured elapsed recorded, not the nominal budget "
+          f"({rep.wall_s:.2f}s)")
+    survivors_identical(baseline, res, victim)
+
+    print(f"[chaos-smoke] corrupt_cache:1 targeting {CASES[0]} "
+          f"(byte flipped on commit)")
+    cache_dir = tempfile.mkdtemp(prefix="graphguard-chaos-cache-")
+    try:
+        set_chaos("corrupt_cache:1", CASES[0])
+        res = run_suite(cache=cache_dir)
+        check(res.ok, "run with corrupting cache still verifies cleanly")
+        set_chaos(None)
+        cache = CertificateCache(cache_dir)
+        check(cache.recovered_corrupt >= 1,
+              f"corrupt journal entry skipped on reload "
+              f"({cache.recovered_corrupt} recovered)")
+        res2 = run_suite(cache=cache)
+        check(res2.cache["hits"] == len(baseline) - 1
+              and res2.cache["misses"] == 1,
+              f"only the damaged entry re-proved "
+              f"(hits={res2.cache['hits']}, misses={res2.cache['misses']})")
+        survivors_identical(baseline, res2, None)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    set_chaos(None)
+    if _failures:
+        print(f"[chaos-smoke] FAILED: {len(_failures)} assertion(s):")
+        for f in _failures:
+            print(f"  - {f}")
+        return 1
+    print("[chaos-smoke] PASS: every injected fault was contained, "
+          "attributed, and survived with byte-identical certificates")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,8 @@ relation-inference hot path.
     python benchmarks/run.py --smoke        # writes BENCH_verify_smoke.json
     python scripts/check_bench.py [--tolerance 1.5]
 
-Every case in the baseline's smoke sections (fig4 / fig5) must be present
-in the fresh run and its ``infer_ms`` must stay under
+Every case in the baseline's smoke sections (see ``SECTION_METRICS``)
+must be present in the fresh run and its gated metric must stay under
 ``max(baseline, --min-ms) * tolerance`` — the ``--min-ms`` floor keeps
 sub-millisecond cases from tripping the gate on scheduler noise.  The
 tolerance (default 1.5x, overridable via ``$BENCH_TOLERANCE``) absorbs the
@@ -21,21 +21,29 @@ import json
 import os
 import sys
 
-# the sections a --smoke run produces; all carry the hot-path metric
-# (modelcheck's infer_ms is the summed relation-inference time over the
-# model's unique obligations; gradcheck's is the sum over a train
-# strategy's per-parameter gradient obligations)
-SMOKE_SECTIONS = ("fig4", "fig5", "modelcheck", "gradcheck")
-METRIC = "infer_ms"
+# the sections a --smoke run produces, each with its gated metric:
+# fig4/fig5/modelcheck/gradcheck gate the relation-inference hot path
+# (modelcheck's infer_ms sums over the model's unique obligations;
+# gradcheck's over a train strategy's per-parameter obligations), and
+# runtime gates the warm-cache re-verification latency — the pre-launch
+# "nothing changed, re-verify" path the persistent cache exists for
+SECTION_METRICS = {
+    "fig4": "infer_ms",
+    "fig5": "infer_ms",
+    "modelcheck": "infer_ms",
+    "gradcheck": "infer_ms",
+    "runtime": "warm_wall_ms",
+}
 
 
 def collect(bench: dict) -> dict:
-    """{"section/case": infer_ms} for every timed case in the smoke sections."""
+    """{"section/case": metric value} for every timed case in the smoke
+    sections (each section contributes its own gated metric)."""
     out = {}
-    for sec in SMOKE_SECTIONS:
+    for sec, metric in SECTION_METRICS.items():
         for case, rec in bench.get(sec, {}).items():
-            if isinstance(rec, dict) and METRIC in rec:
-                out[f"{sec}/{case}"] = float(rec[METRIC])
+            if isinstance(rec, dict) and metric in rec:
+                out[f"{sec}/{case}"] = float(rec[metric])
     return out
 
 

@@ -47,6 +47,13 @@ case "$target" in
                  echo "injected grad bug not localized (rc=$rc, want 1)" >&2
                  exit 1
                fi ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke)" >&2
+  # fault-tolerance gate: injected crashes/exits/hangs/cache corruption
+  # must be contained, attributed to the afflicted task only, and survived
+  # with byte-identical certificates elsewhere
+  chaos-smoke) PYTHONPATH=src python scripts/chaos_smoke.py ;;
+  # persistent-cache gate: cold commits, warm hits byte-identically, torn
+  # journal lines recovered with only the damaged entry re-proved
+  cache-smoke) PYTHONPATH=src python scripts/cache_smoke.py ;;
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|chaos-smoke|cache-smoke)" >&2
      exit 2 ;;
 esac

@@ -13,7 +13,7 @@ suite from ``repro.dist.strategies``; third-party code registers new
 cases with ``@register_strategy`` without touching core.
 """
 from .spec import (BugSpec, Degree, StrategySpec, EXPECTATIONS, axis_degrees,
-                   degree_token, normalize_degree, parse_degree)
+                   degree_token, normalize_degree, parse_degree, task_id)
 from .registry import (DuplicateStrategyError, RegisteredStrategy, bug_host,
                        build_spec, check_model_task, check_train_task,
                        get_strategy, list_bugs, list_model_tasks,
@@ -26,7 +26,7 @@ from ..dist import strategies as _strategies  # noqa: F401 — populate registry
 
 __all__ = [
     "BugSpec", "Degree", "StrategySpec", "EXPECTATIONS", "axis_degrees",
-    "degree_token", "normalize_degree", "parse_degree",
+    "degree_token", "normalize_degree", "parse_degree", "task_id",
     "DuplicateStrategyError", "RegisteredStrategy", "bug_host", "build_spec",
     "check_model_task", "check_train_task", "get_strategy", "list_bugs",
     "list_model_tasks", "list_strategies", "list_train_tasks",

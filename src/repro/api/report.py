@@ -38,6 +38,10 @@ class Report:
     stats: Optional[Dict[str, Any]] = None      # Certificate.stats (timers &c)
     error: Optional[str] = None
     wall_s: float = 0.0
+    runtime: Optional[Dict[str, Any]] = None    # execution-layer facts
+                                                # (cache hit, retries,
+                                                # degraded_reason) — never
+                                                # part of stable_summary
     certificate: Any = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):

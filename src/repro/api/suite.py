@@ -11,45 +11,57 @@ Semantics:
   hosted bugs riding along when ``include_bugs`` (bugs only run under the
   degrees their host case supports).
 * ``run(workers=0)`` (or 1) executes in-process sequentially;
-  ``workers >= 2`` uses a process pool (fork start method where
-  available, spawn elsewhere) whose workers pre-warm the jax backend in
-  an initializer and persist on the Suite instance across ``run`` calls
-  — call ``shutdown()`` or use the Suite as a context manager to release
-  them.  Workers receive only ``(case, degree, bug)`` name triples and
-  rebuild specs from the registry, so nothing unpicklable crosses the
-  boundary.
+  ``workers >= 2`` fans out on the shared fault-tolerant runtime
+  (:mod:`repro.runtime`): a supervised pool (fork start method where
+  available, spawn elsewhere) whose warmed workers persist on the Suite
+  instance across ``run`` calls — call ``shutdown()`` or use the Suite as
+  a context manager to release them.  Workers receive only
+  ``(case, degree, bug)`` name triples and rebuild specs from the
+  registry, so nothing unpicklable crosses the boundary.
 * Results are ordered by the task matrix — never by completion order —
   and the engine's deterministic tie-breaks make certificates (the
   ``r_o`` strings) byte-identical for any worker count and any
   ``GRAPHGUARD_OPT`` setting (covered by ``tests/test_api.py``).
-* ``timeout_s`` is the per-task budget, enforced only on pool runs
-  (``workers >= 2`` — an in-process sequential run cannot interrupt
-  itself).  The happy path dispatches round-robin chunks (one IPC round
-  trip per worker) under a ``timeout_s × chunk-size`` budget; a chunk
-  that exceeds it or crashes is re-run task-by-task on a fresh pool so
-  the offender is reported as ``verdict="timeout"``/``"error"`` under
-  the exact per-task budget, and its wedged worker is killed with the
-  pool.
+* ``timeout_s`` is the *per-task* budget.  On pool runs the runtime
+  enforces it from the moment the task starts on a worker (heartbeat
+  tracked), reports the offender as ``verdict="timeout"`` with its
+  measured elapsed time, kills the wedged worker with its pool, and
+  resumes the rest on a replacement pool.  A crashed worker
+  (``BrokenProcessPool``) quarantines the tasks it was running onto
+  bounded retries with the exit cause recorded in the error string; a
+  pool that cannot be rebuilt degrades to in-process execution with a
+  structured ``degraded_reason`` in every affected Report.  In-process
+  sequential runs cannot interrupt themselves, so budgets are not
+  enforced there.
+* ``cache=`` attaches the persistent certificate cache
+  (:class:`repro.runtime.CertificateCache`): deterministic verdicts are
+  committed as they complete, repeat tasks are served as cache hits with
+  byte-identical certificates, and an interrupted run resumes from its
+  last committed task.
 
 CLI (also the CI golden gate — see scripts/ci.sh `suite`):
 
     python -m repro.api [--cases ...] [--degrees 2 4] [--bugs]
-        [--workers N] [--timeout S] [--json PATH] [--markdown PATH]
+        [--workers N] [--timeout S] [--cache [DIR] | --no-cache]
+        [--json PATH] [--markdown PATH]
         [--check GOLDEN | --write-golden GOLDEN]
 """
 from __future__ import annotations
 
 import argparse
 import json
-import multiprocessing
 import sys
 import time
-from concurrent.futures import ProcessPoolExecutor
-from concurrent.futures import TimeoutError as FutureTimeoutError
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .registry import get_strategy, list_bugs, list_strategies
+# Back-compat re-exports: these lived here before the fault-tolerant
+# runtime was factored out into repro.runtime.
+from ..runtime import (RuntimeTask, SupervisedPool,  # noqa: F401
+                       execute_inline, resolve_cache, strategy_cache_key,
+                       terminate_pool)
+from ..runtime.pool import _warm_worker  # noqa: F401 — legacy import path
+from .registry import build_spec, get_strategy, list_bugs, list_strategies
 from .report import Report
 from .runner import verify
 from .spec import Degree, normalize_degree, parse_degree
@@ -74,48 +86,15 @@ def _run_task(task: Tuple[str, int, Optional[str]],
                   engine_opts=engine_opts).to_json()
 
 
-def _run_batch(tasks: List[Tuple[str, int, Optional[str]]],
-               engine_opts: Optional[dict]) -> List[dict]:
-    """Pool worker: run a chunk of tasks in one IPC round trip."""
-    return [_run_task(t, engine_opts) for t in tasks]
-
-
-def terminate_pool(pool: ProcessPoolExecutor) -> None:
-    """Release a pool without blocking on wedged workers.
-
-    ``shutdown(wait=True)`` would join a worker stuck in a hung task, so
-    drop the executor handle and terminate the processes — idle workers
-    die instantly, wedged ones get SIGTERM instead of leaking until their
-    task (never) finishes.  Shared by the Suite, modelcheck, and
-    gradcheck schedulers.
-    """
-    procs = list(getattr(pool, "_processes", {}).values())
-    pool.shutdown(wait=False, cancel_futures=True)
-    for p in procs:
-        if p.is_alive():
-            p.terminate()
-
-
-def _warm_worker() -> None:
-    """Pool initializer: pay the per-process jax backend cost up front.
-
-    jax drops its XLA client cache in forked children (and spawn starts
-    cold), so the first jax op in a worker costs hundreds of ms.  Doing it
-    in the initializer moves that cost off the first task's critical path
-    and lets a reused pool serve later ``Suite.run`` calls at steady-state
-    speed.
-    """
-    import jax.numpy as jnp
-    (jnp.zeros((1,)) + 1).block_until_ready()
-
-
 class SuiteResult:
     """Ordered reports + aggregation to JSON / Markdown."""
 
-    def __init__(self, reports: List[Report], wall_s: float, workers: int):
+    def __init__(self, reports: List[Report], wall_s: float, workers: int,
+                 cache: Optional[dict] = None):
         self.reports = reports
         self.wall_s = wall_s
         self.workers = workers
+        self.cache = cache               # persistent-cache stats, if used
 
     @property
     def ok(self) -> bool:
@@ -131,7 +110,7 @@ class SuiteResult:
         verdicts: Dict[str, int] = {}
         for r in self.reports:
             verdicts[r.verdict] = verdicts.get(r.verdict, 0) + 1
-        return {
+        out = {
             "total": len(self.reports),
             "ok": sum(r.ok for r in self.reports),
             "not_ok": [r.task_id() for r in self.reports if not r.ok],
@@ -139,6 +118,9 @@ class SuiteResult:
             "wall_s": round(self.wall_s, 3),
             "workers": self.workers,
         }
+        if self.cache is not None:
+            out["cache"] = self.cache
+        return out
 
     def stable_summary(self) -> dict:
         """Timing-free view keyed by task id — the golden-diff artifact."""
@@ -164,6 +146,10 @@ class SuiteResult:
         lines.append("")
         lines.append(f"{s['ok']}/{s['total']} tasks matched expectation in "
                      f"{s['wall_s']:.2f}s ({s['workers']} workers).")
+        if self.cache is not None:
+            lines.append(f"Certificate cache: {self.cache['hits']} hit(s), "
+                         f"{self.cache['misses']} miss(es) "
+                         f"({self.cache['dir']}).")
         return "\n".join(lines)
 
     def write(self, path: str) -> None:
@@ -172,7 +158,7 @@ class SuiteResult:
 
 
 class Suite:
-    """A verification task matrix with a parallel runner."""
+    """A verification task matrix with a fault-tolerant parallel runner."""
 
     def __init__(self, cases: Optional[Sequence[str]] = None,
                  degrees: Optional[Sequence[int]] = None,
@@ -202,7 +188,7 @@ class Suite:
                         f"which is not in this suite's cases — it would "
                         f"never run")
         self.engine_opts = engine_opts
-        self._pool: Optional[ProcessPoolExecutor] = None
+        self._pool: Optional[SupervisedPool] = None
         self._pool_workers = 0
 
     def tasks(self) -> List[SuiteTask]:
@@ -223,46 +209,93 @@ class Suite:
 
     # -- execution ----------------------------------------------------------
     def run(self, workers: Optional[int] = None,
-            timeout_s: float = 120.0) -> SuiteResult:
+            timeout_s: float = 120.0, cache=None,
+            mp_method: Optional[str] = None) -> SuiteResult:
+        """Run the matrix; ``cache`` takes anything
+        :func:`repro.runtime.resolve_cache` accepts (a directory path, an
+        open :class:`CertificateCache`, True for the default location,
+        None to consult ``$GRAPHGUARD_CACHE_DIR``).  ``mp_method``
+        overrides the worker start method (None = platform default;
+        "spawn" sidesteps fork-after-jax hazards in threaded hosts at the
+        cost of per-worker interpreter start-up)."""
         tasks = self.tasks()
         if workers is None:
             workers = min(4, len(tasks)) or 1
+        cache = resolve_cache(cache)
         t0 = time.perf_counter()
+        rts = [self._runtime_task(t, timeout_s, cache) for t in tasks]
         if workers <= 1:
-            dicts = [_run_task((t.case, t.degree, t.bug), self.engine_opts)
-                     for t in tasks]
+            outcomes = execute_inline(rts, cache=cache)
         else:
-            dicts = self._run_pool(tasks, workers, timeout_s)
-        reports = [Report.from_json(d) for d in dicts]
-        return SuiteResult(reports, time.perf_counter() - t0, workers)
+            outcomes = self._get_pool(min(workers, len(rts)) or 1,
+                                      mp_method).execute(rts, cache=cache)
+        reports = [Report.from_json(self._outcome_dict(t, outcomes[t.task_id()]))
+                   for t in tasks]
+        hits = sum(1 for o in outcomes.values() if o.cache == "hit")
+        misses = sum(1 for o in outcomes.values() if o.cache == "miss")
+        cache_stats = None if cache is None else \
+            {"dir": cache.dir, "hits": hits, "misses": misses,
+             "entries": len(cache),
+             "recovered_corrupt": cache.recovered_corrupt}
+        return SuiteResult(reports, time.perf_counter() - t0, workers,
+                           cache=cache_stats)
+
+    def _runtime_task(self, task: SuiteTask, timeout_s: float,
+                      cache) -> RuntimeTask:
+        cache_key = None
+        if cache is not None:
+            # content-addressed: mesh + shapes + dtypes + input specs, so
+            # an edited strategy re-proves while untouched ones hit
+            cache_key = strategy_cache_key(
+                build_spec(task.case, degree=task.degree, bug=task.bug),
+                self.engine_opts)
+        return RuntimeTask(
+            key=task.task_id(), fn=_run_task,
+            args=((task.case, task.degree, task.bug), self.engine_opts),
+            budget_s=timeout_s, cache_key=cache_key)
+
+    def _outcome_dict(self, task: SuiteTask, outcome) -> dict:
+        """Convert a runtime outcome into a Report-shaped dict with the
+        fault attributed to exactly this task."""
+        if outcome.ok:
+            d = dict(outcome.value)
+            info = outcome.runtime_info()
+            if info:
+                d["runtime"] = info
+            return d
+        verdict = "timeout" if outcome.status == "timeout" else "error"
+        return Report(
+            case=task.case, degree=task.degree, bug=task.bug,
+            verdict=verdict, expected=self._expected(task), ok=False,
+            error=outcome.error, wall_s=round(outcome.wall_s, 6),
+            runtime=outcome.runtime_info() or None).to_json()
 
     # -- pool lifecycle -----------------------------------------------------
-    def _get_pool(self, workers: int) -> ProcessPoolExecutor:
-        """Create (or reuse) the worker pool.
+    def _get_pool(self, workers: int,
+                  mp_method: Optional[str] = None) -> SupervisedPool:
+        """Create (or reuse) the supervised worker pool.
 
         The pool persists on the Suite instance across ``run`` calls: the
-        per-worker jax backend re-initialization (see ``_warm_worker``) is
-        paid once, so repeated matrix sweeps run at steady-state speed.
-        Call :meth:`shutdown` (or use the Suite as a context manager) to
-        release the processes.
+        per-worker jax backend re-initialization (see
+        ``repro.runtime.pool._warm_worker``) is paid once, so repeated
+        matrix sweeps run at steady-state speed.  Call :meth:`shutdown`
+        (or use the Suite as a context manager) to release the processes.
         """
-        if self._pool is not None and self._pool_workers != workers:
+        if self._pool is not None and \
+                (self._pool_workers != workers
+                 or (mp_method is not None
+                     and self._pool.mp_method != mp_method)):
             self.shutdown()
         if self._pool is None:
-            methods = multiprocessing.get_all_start_methods()
-            ctx = multiprocessing.get_context(
-                "fork" if "fork" in methods else "spawn")
-            self._pool = ProcessPoolExecutor(
-                max_workers=workers, mp_context=ctx,
-                initializer=_warm_worker)
+            self._pool = SupervisedPool(workers, mp_method=mp_method)
             self._pool_workers = workers
         return self._pool
 
     def shutdown(self) -> None:
         """Release the pool without blocking on wedged workers (see
-        :func:`terminate_pool`)."""
+        :func:`repro.runtime.terminate_pool`)."""
         if self._pool is not None:
-            terminate_pool(self._pool)
+            self._pool.shutdown()
             self._pool = None
             self._pool_workers = 0
 
@@ -272,75 +305,12 @@ class Suite:
     def __exit__(self, *exc) -> None:
         self.shutdown()
 
-    def _run_pool(self, tasks: List[SuiteTask], workers: int,
-                  timeout_s: float) -> List[dict]:
-        """Chunked fan-out with an individual-retry failure path.
-
-        Tasks are dealt round-robin into one chunk per worker so the happy
-        path costs one IPC round trip per worker instead of per task (the
-        tasks are small; dispatch overhead would otherwise dominate).  A
-        chunk that times out or crashes cannot attribute blame, so its
-        tasks are re-run one-by-one on a fresh pool with the true per-task
-        timeout — slow, but only on the failure path.
-        """
-        workers = min(workers, len(tasks)) or 1
-        pool = self._get_pool(workers)
-        dicts: List[dict] = [None] * len(tasks)  # type: ignore[list-item]
-        chunk_idx = [list(range(len(tasks)))[i::workers]
-                     for i in range(workers)]
-        chunk_idx = [c for c in chunk_idx if c]
-        futs = [pool.submit(
-            _run_batch,
-            [(tasks[i].case, tasks[i].degree, tasks[i].bug) for i in idxs],
-            self.engine_opts) for idxs in chunk_idx]
-        retry: List[int] = []
-        poisoned = False
-        for idxs, fut in zip(chunk_idx, futs):
-            try:
-                for i, d in zip(idxs, fut.result(
-                        timeout=timeout_s * len(idxs))):
-                    dicts[i] = d
-            except Exception:  # noqa: BLE001 — timeout or broken worker
-                fut.cancel()
-                poisoned = True
-                retry.extend(idxs)
-        if poisoned:
-            self.shutdown()              # don't reuse a pool with stuck tasks
-        for i in retry:
-            dicts[i] = self._run_single(tasks[i], timeout_s)
-        if retry:
-            self.shutdown()
-        return dicts
-
     @staticmethod
     def _expected(task: SuiteTask) -> str:
         entry = get_strategy(task.case)
         if task.bug is None:
             return entry.expected
         return entry.bug_spec(task.bug).expected
-
-    def _run_single(self, task: SuiteTask, timeout_s: float) -> dict:
-        """Failure-path execution: one task, one worker, hard timeout."""
-        pool = self._get_pool(1)
-        fut = pool.submit(_run_task, (task.case, task.degree, task.bug),
-                          self.engine_opts)
-        try:
-            return fut.result(timeout=timeout_s)
-        except FutureTimeoutError:
-            fut.cancel()
-            self.shutdown()              # kill the wedged worker
-            return Report(
-                case=task.case, degree=task.degree, bug=task.bug,
-                verdict="timeout", expected=self._expected(task), ok=False,
-                error=f"exceeded per-task timeout of {timeout_s}s",
-                wall_s=timeout_s).to_json()
-        except Exception as e:  # noqa: BLE001 — broken worker
-            self.shutdown()
-            return Report(
-                case=task.case, degree=task.degree, bug=task.bug,
-                verdict="error", expected=self._expected(task), ok=False,
-                error=f"worker failed: {type(e).__name__}: {e}",
-                wall_s=0.0).to_json()
 
 
 # ---------------------------------------------------------------------------
@@ -377,6 +347,28 @@ def update_golden(path: str = DEFAULT_GOLDEN, workers: int = 4,
     return 0
 
 
+def add_cache_flags(ap: argparse.ArgumentParser) -> None:
+    """The shared --cache/--no-cache pair (also used by launch/verify)."""
+    from ..runtime import DEFAULT_CACHE_DIR
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--cache", nargs="?", const=True, default=None,
+                   metavar="DIR",
+                   help="persistent certificate cache: --cache DIR uses "
+                        f"DIR, bare --cache uses {DEFAULT_CACHE_DIR}/ "
+                        "(default: on only when $GRAPHGUARD_CACHE_DIR "
+                        "is set)")
+    g.add_argument("--no-cache", action="store_true",
+                   help="disable the certificate cache even if "
+                        "$GRAPHGUARD_CACHE_DIR is set")
+
+
+def cache_from_args(args):
+    """Map the flag pair onto :func:`repro.runtime.resolve_cache` input."""
+    if args.no_cache:
+        return False
+    return args.cache                    # None -> env default; True/DIR
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.api",
@@ -392,6 +384,7 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--timeout", type=float, default=120.0,
                     help="per-task timeout in seconds")
+    add_cache_flags(ap)
     ap.add_argument("--json", default=None, help="write full report JSON")
     ap.add_argument("--markdown", default=None, help="write Markdown table")
     ap.add_argument("--check", default=None, metavar="GOLDEN",
@@ -412,6 +405,7 @@ def main(argv=None) -> int:
             ("--cases", args.cases), ("--degrees", args.degrees),
             ("--bugs", args.bugs or None), ("--json", args.json),
             ("--markdown", args.markdown), ("--check", args.check),
+            ("--cache", args.cache),
             ("--write-golden", args.write_golden)) if v is not None]
         if clash:
             ap.error(f"--update-golden regenerates the canonical "
@@ -422,7 +416,8 @@ def main(argv=None) -> int:
 
     suite = Suite(cases=args.cases, degrees=args.degrees,
                   include_bugs=args.bugs)
-    result = suite.run(workers=args.workers, timeout_s=args.timeout)
+    result = suite.run(workers=args.workers, timeout_s=args.timeout,
+                       cache=cache_from_args(args))
     print(result.to_markdown())
     if args.json:
         result.write(args.json)

@@ -50,6 +50,9 @@ class TrainReport:
     bug_param: Optional[str] = None      # the parameter the bug targets
     wall_s: float = 0.0
     workers: int = 0
+    cache: Optional[dict] = None         # persistent-cache stats (hits,
+                                         # misses, entries) — timing-class
+                                         # data, never in stable_summary
     schema_version: int = TRAIN_REPORT_SCHEMA
 
     def __post_init__(self):

@@ -1,26 +1,29 @@
-"""Scheduler: fan per-parameter gradient obligations across a pool.
+"""Scheduler: fan per-parameter gradient obligations across the runtime.
 
 ``check_train`` is the subsystem entry point.  Parameter obligations are
-verified either in-process or on a spawn pool with the same warmed-worker
-discipline as :class:`repro.api.Suite` / ``repro.modelcheck.schedule`` —
-workers receive only picklable ``(strategy, degree, bug, param)`` tuples
-and rebuild the obligation from the deterministic registry, so nothing
-unpicklable crosses the boundary and certificates stay byte-identical for
-any worker count.
+verified in-process or on a supervised spawn pool (:mod:`repro.runtime`)
+— workers receive only picklable ``(strategy, degree, bug, param)``
+tuples and rebuild the obligation from the deterministic registry, so
+nothing unpicklable crosses the boundary and certificates stay
+byte-identical for any worker count.  ``timeout_s`` budgets each
+parameter obligation individually from the moment it starts on a worker;
+``cache=`` attaches the persistent certificate cache keyed per
+(strategy spec, parameter).
 """
 from __future__ import annotations
 
 import time
-from concurrent.futures import ProcessPoolExecutor
-from concurrent.futures import TimeoutError as FutureTimeoutError
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 from ..api.report import Report
 from ..api.runner import _engine_opts
-from ..api.spec import Degree, StrategySpec
+from ..api.spec import Degree, StrategySpec, task_id
 from ..core import RefinementError, check_refinement, expand_spmd
 from ..core.capture import capture
 from ..core.terms import pretty
+from ..runtime import (RuntimeTask, resolve_cache, run_tasks,
+                       strategy_cache_key)
 from .capture_grad import capture_grad_spmd
 from .obligations import get_train_strategy
 from .report import ParamResult, TrainReport
@@ -105,73 +108,91 @@ def _verify_param(spec: StrategySpec, param: str,
 
 
 def _pool_task(strategy: str, degree: Degree, bug: Optional[str],
-               param: str, engine_opts: Optional[dict]) -> Tuple[str, dict]:
+               param: str, engine_opts: Optional[dict]) -> dict:
     """Pool worker: rebuild the obligation by name and verify it."""
     spec = get_train_strategy(strategy).build(degree=degree, bug=bug)[param]
-    return param, _verify_param(spec, param, engine_opts)
+    return _verify_param(spec, param, engine_opts)
+
+
+def _outcome_report(spec: StrategySpec, outcome) -> dict:
+    """Convert a runtime outcome into this parameter's report dict."""
+    if outcome.ok:
+        d = dict(outcome.value)
+        info = outcome.runtime_info()
+        if info:
+            d["runtime"] = info
+        return d
+    verdict = "timeout" if outcome.status == "timeout" else "error"
+    d = Report(
+        case=spec.name, degree=spec.degree, bug=spec.bug,
+        verdict=verdict, expected=spec.expected, ok=False,
+        error=outcome.error, wall_s=round(outcome.wall_s, 6),
+        runtime=outcome.runtime_info() or None).to_json()
+    d["collective"] = "?"
+    return d
 
 
 def run_train_obligations(strategy: str, degree: Degree,
                           bug: Optional[str] = None,
                           workers: Optional[int] = None,
                           engine_opts: Optional[dict] = None,
-                          timeout_s: float = DEFAULT_TIMEOUT_S
-                          ) -> Tuple[Dict[str, dict], int]:
-    """Verify every parameter obligation; returns
-    ``({param: report dict}, workers actually used)``."""
+                          timeout_s: float = DEFAULT_TIMEOUT_S,
+                          cache=None
+                          ) -> Tuple[Dict[str, dict], int, Optional[dict]]:
+    """Verify every parameter obligation.
+
+    Returns ``({param: report dict}, workers actually used, cache stats
+    or None)``.  ``timeout_s`` budgets each parameter obligation
+    individually; ``cache`` takes anything
+    :func:`repro.runtime.resolve_cache` accepts.
+    """
     entry = get_train_strategy(strategy)
     specs = entry.build(degree=degree, bug=bug)
     params = list(specs)
     if workers is None:
         # sub-second obligations, small count: in-process beats pool spin-up
         workers = min(4, len(params)) if len(params) > 4 else 1
-    reports: Dict[str, dict] = {}
-    if workers < 2:
-        for param in params:
-            reports[param] = _verify_param(specs[param], param, engine_opts)
-        return reports, 1
-
-    import multiprocessing
-
-    from ..api.suite import _warm_worker, terminate_pool
+    cache = resolve_cache(cache)
+    base = f"train@{task_id(strategy, degree, bug)}"
+    tasks = []
+    for param in params:
+        spec = specs[param]
+        # the per-parameter specs share name/mesh/inputs (they differ in
+        # the traced grad fn, which is not hashable) — the parameter name
+        # must be part of the cache identity
+        cache_key = None if cache is None else \
+            f"{strategy_cache_key(spec, engine_opts)}:grad-{param}"
+        tasks.append(RuntimeTask(
+            key=f"{base}:{param}", fn=_pool_task,
+            args=(strategy, degree, bug, param, engine_opts),
+            budget_s=timeout_s, cache_key=cache_key,
+            local_fn=partial(_verify_param, spec, param, engine_opts)))
+    used = min(workers, len(params)) or 1
     # spawn, not fork: the parent has traced jax by now (see modelcheck)
-    ctx = multiprocessing.get_context("spawn")
-    pool = ProcessPoolExecutor(max_workers=min(workers, len(params)),
-                               mp_context=ctx, initializer=_warm_worker)
-    try:
-        futs = {param: pool.submit(_pool_task, strategy, degree, bug,
-                                   param, engine_opts)
-                for param in params}
-        deadline = time.monotonic() + timeout_s
-        for param, fut in futs.items():
-            try:
-                _, reports[param] = fut.result(
-                    timeout=max(deadline - time.monotonic(), 0.001))
-            except FutureTimeoutError:
-                fut.cancel()
-                spec = specs[param]
-                reports[param] = Report(
-                    case=spec.name, degree=spec.degree, bug=spec.bug,
-                    verdict="timeout", expected=spec.expected, ok=False,
-                    error=f"exceeded gradcheck budget of {timeout_s}s",
-                    wall_s=timeout_s).to_json()
-            except Exception:  # noqa: BLE001 — broken worker: run in-process
-                reports[param] = _verify_param(specs[param], param,
-                                               engine_opts)
-    finally:
-        terminate_pool(pool)
-    return reports, min(workers, len(params))
+    outcomes = run_tasks(tasks, used, mp_method="spawn", cache=cache)
+    reports = {param: _outcome_report(specs[param],
+                                      outcomes[f"{base}:{param}"])
+               for param in params}
+    cache_stats = None if cache is None else {
+        "dir": cache.dir,
+        "hits": sum(1 for o in outcomes.values() if o.cache == "hit"),
+        "misses": sum(1 for o in outcomes.values() if o.cache == "miss"),
+        "entries": len(cache),
+        "recovered_corrupt": cache.recovered_corrupt}
+    return reports, used, cache_stats
 
 
 def check_train(strategy: str, *, degree: Optional[Degree] = None,
                 bug: Optional[str] = None, workers: Optional[int] = None,
                 engine_opts: Optional[dict] = None,
-                timeout_s: float = DEFAULT_TIMEOUT_S) -> TrainReport:
+                timeout_s: float = DEFAULT_TIMEOUT_S,
+                cache=None) -> TrainReport:
     """Train-step refinement check: one obligation per parameter, stitched.
 
     Returns a :class:`TrainReport`; never raises on verification failures
     (they become parameter verdicts) — only on caller mistakes (unknown
-    strategy / bug / degree).
+    strategy / bug / degree).  ``cache`` attaches the persistent
+    certificate cache (see :func:`repro.runtime.resolve_cache`).
     """
     t0 = time.perf_counter()
     entry = get_train_strategy(strategy)
@@ -182,9 +203,9 @@ def check_train(strategy: str, *, degree: Optional[Degree] = None,
         raise ValueError(
             f"bug `{bug}` is not hosted by train strategy `{strategy}` "
             f"(hosted: {sorted(entry.bug_names()) or '-'})")
-    reports, used = run_train_obligations(
+    reports, used, cache_stats = run_train_obligations(
         strategy, degree, bug=bug, workers=workers,
-        engine_opts=engine_opts, timeout_s=timeout_s)
+        engine_opts=engine_opts, timeout_s=timeout_s, cache=cache)
 
     params: List[ParamResult] = []
     failing: List[str] = []
@@ -225,4 +246,5 @@ def check_train(strategy: str, *, degree: Optional[Degree] = None,
         strategy=strategy, degree=degree, verdict=verdict, ok=ok,
         params=params, reports=dict(reports), failing_params=failing,
         bug=bug, bug_param=bug_param,
-        wall_s=round(time.perf_counter() - t0, 6), workers=used)
+        wall_s=round(time.perf_counter() - t0, 6), workers=used,
+        cache=cache_stats)

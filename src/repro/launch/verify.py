@@ -35,7 +35,7 @@ import sys
 
 from ..api import (build_spec, degree_token, get_strategy, list_bugs,
                    list_model_tasks, list_strategies, list_train_tasks,
-                   parse_degree, run_spec, verify)
+                   parse_degree, run_spec, task_id, verify)
 from ..core import RefinementError
 from ..dist.strategies import STRATEGY_CASES as CASES  # legacy view re-export
 
@@ -112,11 +112,14 @@ def _case_timing(report) -> dict:
     }
 
 
-def _run_model(args) -> int:
+def _run_model(args, cache) -> int:
     from ..modelcheck import ModelCheckError, check_model
+    from ..modelcheck.schedule import DEFAULT_TIMEOUT_S
     try:
         report = check_model(args.model, args.plan, bug=args.inject_bug,
-                             bug_layer=args.bug_layer, workers=args.workers)
+                             bug_layer=args.bug_layer, workers=args.workers,
+                             timeout_s=args.timeout or DEFAULT_TIMEOUT_S,
+                             cache=cache)
     except (ModelCheckError, ValueError) as e:
         print(f"[modelcheck] {e}", file=sys.stderr)
         return 2
@@ -146,11 +149,14 @@ def _run_model(args) -> int:
     return 0 if report.ok else 1
 
 
-def _run_train(args) -> int:
+def _run_train(args, cache) -> int:
     from ..gradcheck import check_train
+    from ..gradcheck.schedule import DEFAULT_TIMEOUT_S
     try:
         report = check_train(args.train, degree=args.degree,
-                             bug=args.inject_bug, workers=args.workers)
+                             bug=args.inject_bug, workers=args.workers,
+                             timeout_s=args.timeout or DEFAULT_TIMEOUT_S,
+                             cache=cache)
     except (KeyError, ValueError) as e:
         print(f"[gradcheck] {e}", file=sys.stderr)
         return 2
@@ -177,6 +183,43 @@ def _run_train(args) -> int:
             return 2
         return 1
     return 0 if report.ok else 1
+
+
+def _case_report(args, cache) -> dict:
+    """Run the single case through the shared runtime so ``--timeout`` and
+    ``--cache`` behave exactly as they do for suite/model/train runs."""
+    from ..api import Report
+    from ..api.suite import _run_task
+    from ..runtime import (RuntimeTask, SupervisedPool, execute_inline,
+                           strategy_cache_key)
+    key = task_id(args.case, args.degree, args.bug)
+    cache_key = None if cache is None else strategy_cache_key(
+        build_spec(args.case, degree=args.degree, bug=args.bug))
+    rt = RuntimeTask(key=key, fn=_run_task,
+                     args=((args.case, args.degree, args.bug), None),
+                     budget_s=args.timeout or 120.0, cache_key=cache_key)
+    if args.timeout is not None:
+        # budget enforcement needs a supervisor outside the task — one
+        # supervised worker, killed if it overruns
+        with SupervisedPool(1) as pool:
+            outcome = pool.execute([rt], cache=cache)[key]
+    else:
+        outcome = execute_inline([rt], cache=cache)[key]
+    if outcome.ok:
+        d = dict(outcome.value)
+        info = outcome.runtime_info()
+        if info:
+            d["runtime"] = info
+        return d
+    entry = get_strategy(args.case)
+    expected = entry.expected if args.bug is None \
+        else entry.bug_spec(args.bug).expected
+    return Report(
+        case=args.case, degree=args.degree, bug=args.bug,
+        verdict="timeout" if outcome.status == "timeout" else "error",
+        expected=expected, ok=False, error=outcome.error,
+        wall_s=round(outcome.wall_s, 6),
+        runtime=outcome.runtime_info() or None).to_json()
 
 
 def main(argv=None):
@@ -213,6 +256,15 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=None,
                     help="process-pool size for --model/--train "
                          "(default: auto)")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-task budget in seconds, unified across "
+                         "--case/--model/--train and enforced by the "
+                         "supervised runtime from the moment a task "
+                         "starts on a worker (default: unbudgeted for "
+                         "--case, 600s per obligation for "
+                         "--model/--train)")
+    from ..api.suite import add_cache_flags
+    add_cache_flags(ap)
     ap.add_argument("--list", action="store_true",
                     help="print registered case/model/train tasks and "
                          "bugs (kind-tagged) and exit")
@@ -223,6 +275,9 @@ def main(argv=None):
     if args.list:
         _print_registry()
         return
+    from ..api.suite import cache_from_args
+    from ..runtime import resolve_cache
+    cache = resolve_cache(cache_from_args(args))
     if args.model is not None and args.train is not None:
         ap.error("--model and --train are separate paths")
     if args.model is not None:
@@ -231,7 +286,7 @@ def main(argv=None):
         if args.inject_bug in train_bugs:
             ap.error(f"--inject-bug {args.inject_bug} is a gradient bug — "
                      f"it requires --train")
-        rc = _run_model(args)
+        rc = _run_model(args, cache)
         if rc:
             sys.exit(rc)
         return
@@ -244,7 +299,7 @@ def main(argv=None):
         if args.bug_layer is not None:
             ap.error("--bug-layer applies to --model (gradient bugs "
                      "localize to a parameter, not a layer)")
-        rc = _run_train(args)
+        rc = _run_train(args, cache)
         if rc:
             sys.exit(rc)
         return
@@ -256,10 +311,21 @@ def main(argv=None):
         args.case = "tp_layer"
     if args.degree is None:
         args.degree = 2
-    if args.json:
-        report = verify(args.case, degree=args.degree, bug=args.bug)
-        print(_json_envelope("case", report.to_json(),
-                             _case_timing(report)))
+    if args.json or args.timeout is not None or cache is not None:
+        from ..api import Report
+        d = _case_report(args, cache)
+        report = Report.from_json(d)
+        if args.json:
+            print(_json_envelope("case", d, _case_timing(report)))
+        elif report.verdict == "certificate":
+            for k, v in (report.r_o or {}).items():
+                print(f"  {k} = {v}")
+            print("REFINEMENT HOLDS (certificate above)")
+        elif report.verdict == "refinement_error":
+            print("REFINEMENT FAILED — bug localized:")
+            print(json.dumps(report.localization, indent=2, sort_keys=True))
+        else:
+            print(f"VERDICT: {report.verdict} — {report.error}")
         if report.verdict != "certificate":
             sys.exit(1)
         return

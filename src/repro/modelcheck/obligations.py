@@ -23,23 +23,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 from ..api.spec import StrategySpec
 
 
-def _spec_token(spec) -> str:
-    """Stable string form of a PartitionSpec (or None)."""
-    if spec is None:
-        return "-"
-    entries = []
-    for e in tuple(spec):
-        if e is None:
-            entries.append("_")
-        elif isinstance(e, tuple):
-            entries.append("(" + "+".join(map(str, e)) + ")")
-        else:
-            entries.append(str(e))
-    return "P[" + ",".join(entries) + "]"
-
-
-def _aval_token(aval) -> str:
-    return f"{tuple(aval.shape)}:{aval.dtype}"
+# the token vocabulary is shared with the persistent certificate cache
+# (repro.runtime.cache), which content-addresses on these same strings
+from ..runtime.cache import aval_token as _aval_token  # noqa: E402
+from ..runtime.cache import spec_token as _spec_token  # noqa: E402
 
 
 @dataclass(frozen=True)

@@ -52,6 +52,9 @@ class ModelReport:
     gs_ops_total: int = 0                # whole-model sequential op count
     wall_s: float = 0.0
     workers: int = 0
+    cache: Optional[dict] = None         # persistent-cache stats (hits,
+                                         # misses, entries) — timing-class
+                                         # data, never in stable_summary
     schema_version: int = MODEL_REPORT_SCHEMA
 
     def __post_init__(self):

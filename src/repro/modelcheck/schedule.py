@@ -1,18 +1,22 @@
-"""Scheduler: fan unique obligations across the Suite worker pool model.
+"""Scheduler: fan unique obligations across the shared runtime.
 
 ``check_model`` is the subsystem entry point.  Unique obligations (after
-dedup) are verified either in-process or on a fork/spawn process pool with
-the same warmed-worker discipline as :class:`repro.api.Suite` — workers
-receive only picklable ``(model id, plan name, bug, bug_layer, key)``
-tuples and rebuild the obligation from the deterministic decomposition,
-so nothing unpicklable crosses the boundary and certificates stay
-byte-identical for any worker count.
+dedup) are verified in-process or on a supervised spawn pool
+(:mod:`repro.runtime`) — workers receive only picklable
+``(model id, plan name, bug, bug_layer, key)`` tuples and rebuild the
+obligation from the deterministic decomposition, so nothing unpicklable
+crosses the boundary and certificates stay byte-identical for any worker
+count.  ``timeout_s`` is a *per-obligation* budget enforced from the
+moment the obligation starts on a worker, so one slow obligation can
+never eat the budget of those queued behind it — the offender alone is
+reported as ``timeout`` with its measured elapsed time.  With a
+persistent cache attached (``cache=``), committed obligations are served
+across runs by ``obligations.canonical_key`` content addressing.
 """
 from __future__ import annotations
 
 import time
-from concurrent.futures import ProcessPoolExecutor
-from concurrent.futures import TimeoutError as FutureTimeoutError
+from functools import partial
 from typing import Dict, Optional, Tuple, Union
 
 from ..api.report import Report
@@ -22,6 +26,8 @@ from ..core import (RefinementError, capture, capture_spmd, check_refinement,
 from ..core.terms import pretty
 from ..models.config import ModelConfig
 from ..models.registry import load_config
+from ..runtime import (RuntimeTask, obligation_cache_key, resolve_cache,
+                       run_tasks)
 from ..sharding.specs import MeshPlan
 from .decompose import Decomposition, decompose, list_model_ids
 from .obligations import Obligation
@@ -101,13 +107,13 @@ def _task_name(dec: Decomposition, key: str) -> str:
 
 def _pool_task(model: str, plan: str, bug: Optional[str],
                bug_layer: Optional[int], key: str,
-               engine_opts: Optional[dict]) -> Tuple[str, dict]:
+               engine_opts: Optional[dict]) -> dict:
     """Pool worker: rebuild the (deterministic) decomposition and verify
     the obligation addressed by ``key``."""
     dec = decompose(model, plan, bug=bug, bug_layer=bug_layer)
     ob = dec.obset.unique[key]
-    return key, _verify_obligation(ob, _task_name(dec, key),
-                                   _expected_for(ob), engine_opts)
+    return _verify_obligation(ob, _task_name(dec, key),
+                              _expected_for(ob), engine_opts)
 
 
 def _poolable(dec: Decomposition) -> bool:
@@ -116,12 +122,43 @@ def _poolable(dec: Decomposition) -> bool:
             and load_config(dec.model) == dec.cfg)
 
 
+def _outcome_report(dec: Decomposition, key: str, outcome) -> dict:
+    """Convert a runtime outcome into this obligation's report dict."""
+    if outcome.ok:
+        d = dict(outcome.value)
+        if outcome.cache == "hit":
+            # cache entries are content-addressed — the committed report
+            # may carry the task name of another model that shares the
+            # obligation; re-label it for this decomposition
+            d["case"] = _task_name(dec, key)
+        info = outcome.runtime_info()
+        if info:
+            d["runtime"] = info
+        return d
+    ob = dec.obset.unique[key]
+    verdict = "timeout" if outcome.status == "timeout" else "error"
+    return Report(
+        case=_task_name(dec, key),
+        degree=tuple(s for _, s in ob.mesh_axes), bug=None,
+        verdict=verdict, expected=_expected_for(ob), ok=False,
+        error=outcome.error, wall_s=round(outcome.wall_s, 6),
+        runtime=outcome.runtime_info() or None).to_json()
+
+
 def run_obligations(dec: Decomposition, workers: Optional[int] = None,
                     engine_opts: Optional[dict] = None,
-                    timeout_s: float = DEFAULT_TIMEOUT_S
-                    ) -> Tuple[Dict[str, dict], int]:
-    """Verify the decomposition's unique obligations; returns
-    ``({key: report dict}, workers actually used)``."""
+                    timeout_s: float = DEFAULT_TIMEOUT_S,
+                    cache=None
+                    ) -> Tuple[Dict[str, dict], int, Optional[dict]]:
+    """Verify the decomposition's unique obligations.
+
+    Returns ``({key: report dict}, workers actually used, cache stats or
+    None)``.  ``timeout_s`` budgets each obligation individually — the
+    runtime starts the clock when the obligation starts on a worker, so a
+    slow obligation times out alone instead of marking everything queued
+    behind it.  ``cache`` takes anything
+    :func:`repro.runtime.resolve_cache` accepts.
+    """
     keys = dec.obset.keys_in_order()
     if workers is None:
         # auto: dedup usually leaves a single model with 3-4 sub-second
@@ -130,53 +167,35 @@ def run_obligations(dec: Decomposition, workers: Optional[int] = None,
         workers = min(4, len(keys)) if len(keys) > 4 else 1
     if workers >= 2 and not _poolable(dec):
         workers = 1
-    reports: Dict[str, dict] = {}
-    if workers < 2:
-        for key in keys:
-            ob = dec.obset.unique[key]
-            reports[key] = _verify_obligation(
-                ob, _task_name(dec, key), _expected_for(ob), engine_opts)
-        return reports, 1
-
-    import multiprocessing
-
-    from ..api.suite import _warm_worker, terminate_pool
+    cache = resolve_cache(cache)
+    tasks = []
+    for key in keys:
+        ob = dec.obset.unique[key]
+        tasks.append(RuntimeTask(
+            key=key, fn=_pool_task,
+            args=(dec.model, dec.plan.name, dec.bug, dec.bug_layer, key,
+                  engine_opts),
+            budget_s=timeout_s,
+            cache_key=None if cache is None
+            else obligation_cache_key(key, engine_opts),
+            local_fn=partial(_verify_obligation, ob, _task_name(dec, key),
+                             _expected_for(ob), engine_opts)))
+    used = min(workers, len(keys)) or 1
     # spawn, not fork: by the time a whole-model check runs, the parent
     # process has usually executed jax/pallas work and forking its
     # multithreaded state can deadlock the child mid-trace.  Obligations
     # are second-granularity (unlike the Suite's millisecond strategy
     # tasks), so the per-worker interpreter spin-up amortizes.
-    ctx = multiprocessing.get_context("spawn")
-    pool = ProcessPoolExecutor(max_workers=min(workers, len(keys)),
-                               mp_context=ctx, initializer=_warm_worker)
-    try:
-        futs = {key: pool.submit(_pool_task, dec.model, dec.plan.name,
-                                 dec.bug, dec.bug_layer, key, engine_opts)
-                for key in keys}
-        deadline = time.monotonic() + timeout_s
-        for key, fut in futs.items():
-            ob = dec.obset.unique[key]
-            try:
-                _, reports[key] = fut.result(
-                    timeout=max(deadline - time.monotonic(), 0.001))
-            except FutureTimeoutError:
-                fut.cancel()
-                reports[key] = Report(
-                    case=_task_name(dec, key),
-                    degree=tuple(s for _, s in ob.mesh_axes), bug=None,
-                    verdict="timeout", expected=_expected_for(ob), ok=False,
-                    error=f"exceeded model-check budget of {timeout_s}s",
-                    wall_s=timeout_s).to_json()
-            except Exception:  # noqa: BLE001 — broken/crashed worker:
-                # fork-after-jax is flaky under heavy parent state, and the
-                # obligation count is small — fall back to verifying this
-                # obligation in-process rather than degrading the verdict
-                reports[key] = _verify_obligation(
-                    ob, _task_name(dec, key), _expected_for(ob),
-                    engine_opts)
-    finally:
-        terminate_pool(pool)
-    return reports, min(workers, len(keys))
+    outcomes = run_tasks(tasks, used, mp_method="spawn", cache=cache)
+    reports = {key: _outcome_report(dec, key, outcomes[key])
+               for key in keys}
+    cache_stats = None if cache is None else {
+        "dir": cache.dir,
+        "hits": sum(1 for o in outcomes.values() if o.cache == "hit"),
+        "misses": sum(1 for o in outcomes.values() if o.cache == "miss"),
+        "entries": len(cache),
+        "recovered_corrupt": cache.recovered_corrupt}
+    return reports, used, cache_stats
 
 
 def check_model(model: Union[str, ModelConfig], plan: Union[str, MeshPlan],
@@ -184,16 +203,20 @@ def check_model(model: Union[str, ModelConfig], plan: Union[str, MeshPlan],
                 bug_layer: Optional[int] = None,
                 workers: Optional[int] = None,
                 engine_opts: Optional[dict] = None,
-                timeout_s: float = DEFAULT_TIMEOUT_S) -> ModelReport:
+                timeout_s: float = DEFAULT_TIMEOUT_S,
+                cache=None) -> ModelReport:
     """Whole-model refinement check: decompose, dedup, verify, stitch.
 
     Returns a :class:`ModelReport`; never raises on verification failures
     (they become block verdicts) — only on caller mistakes (unknown model /
-    plan / bug).
+    plan / bug).  ``cache`` attaches the persistent certificate cache
+    (see :func:`repro.runtime.resolve_cache`), so a re-check after a
+    one-block edit re-proves only the changed obligation.
     """
     t0 = time.perf_counter()
     dec = decompose(model, plan, bug=bug, bug_layer=bug_layer)
-    reports, used = run_obligations(dec, workers=workers,
-                                    engine_opts=engine_opts,
-                                    timeout_s=timeout_s)
-    return stitch(dec, reports, time.perf_counter() - t0, used)
+    reports, used, cache_stats = run_obligations(
+        dec, workers=workers, engine_opts=engine_opts,
+        timeout_s=timeout_s, cache=cache)
+    return stitch(dec, reports, time.perf_counter() - t0, used,
+                  cache_stats=cache_stats)

@@ -35,7 +35,7 @@ def expected_output_relation(base_name: str, local_shape, dtype: str,
 
 
 def stitch(dec: Decomposition, reports: Dict[str, dict], wall_s: float,
-           workers: int) -> ModelReport:
+           workers: int, cache_stats: Dict = None) -> ModelReport:
     """Assemble per-obligation reports into the whole-model verdict.
 
     Per-block verdicts come from the dedup cache (``reports`` is keyed by
@@ -87,4 +87,5 @@ def stitch(dec: Decomposition, reports: Dict[str, dict], wall_s: float,
         dedup_ratio=round(dec.dedup_ratio, 3), blocks=blocks,
         reports=dict(reports), failing_blocks=failing,
         bug=dec.bug, bug_layer=dec.bug_layer,
-        gs_ops_total=gs_ops_total, wall_s=round(wall_s, 6), workers=workers)
+        gs_ops_total=gs_ops_total, wall_s=round(wall_s, 6), workers=workers,
+        cache=cache_stats)

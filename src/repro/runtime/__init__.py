@@ -1,0 +1,31 @@
+"""repro.runtime — fault-tolerant execution layer for the verifier.
+
+The shared runtime under ``repro.api.Suite``, ``repro.modelcheck`` and
+``repro.gradcheck``: a supervised worker pool (per-task budgets,
+heartbeat-based hang/death telling, bounded retry with worker
+replacement, in-process degradation), a crash-safe persistent
+certificate cache, and the chaos harness that proves both.
+
+    from repro.runtime import RuntimeTask, SupervisedPool, run_tasks
+    outcomes = run_tasks(tasks, workers=4, cache=CertificateCache(dir))
+
+Fault injection (tests / ``make chaos-smoke``):
+
+    GRAPHGUARD_CHAOS=crash:1 GRAPHGUARD_CHAOS_TARGET=sp_moe ...
+"""
+from .cache import (CACHE_SCHEMA, DEFAULT_CACHE_DIR, CertificateCache,
+                    aval_token, cacheable_report, engine_fingerprint,
+                    obligation_cache_key, resolve_cache, spec_token,
+                    strategy_cache_key)
+from .pool import (PoolUnavailable, RuntimeTask, SupervisedPool,
+                   TaskOutcome, execute_inline, run_tasks, terminate_pool)
+from . import chaos
+
+__all__ = [
+    "CACHE_SCHEMA", "DEFAULT_CACHE_DIR", "CertificateCache", "aval_token",
+    "cacheable_report", "engine_fingerprint", "obligation_cache_key",
+    "resolve_cache", "spec_token", "strategy_cache_key",
+    "PoolUnavailable", "RuntimeTask", "SupervisedPool", "TaskOutcome",
+    "execute_inline", "run_tasks", "terminate_pool",
+    "chaos",
+]
