@@ -4,7 +4,8 @@ PY ?= python
 PYTEST ?= $(PY) -m pytest
 
 .PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden \
-	modelcheck-smoke gradcheck-smoke chaos-smoke cache-smoke
+	modelcheck-smoke gradcheck-smoke servecheck-smoke chaos-smoke \
+	cache-smoke
 
 # tier-1 gate: full test suite
 verify:
@@ -58,6 +59,15 @@ gradcheck-smoke:
 	PYTHONPATH=src $(PY) -m repro.launch.verify --train dp_accum
 	PYTHONPATH=src $(PY) -m repro.launch.verify --train dp_accum \
 		--inject-bug accum_no_rescale; test $$? -eq 1
+
+# serving-path verification smoke: tp_decode must emit a clean serving
+# certificate (decode steps deduped by position class + the prefill-read
+# chain closing through dus_concat/dus_unfold), and the injected
+# stale-cache-shard bug must be localized to exactly its decode step (rc=1)
+servecheck-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.verify --serve tp_decode
+	PYTHONPATH=src $(PY) -m repro.launch.verify --serve tp_decode \
+		--inject-bug stale_cache_shard; test $$? -eq 1
 
 # fault-tolerance gate: inject worker crashes / hard exits / hangs / cache
 # corruption (GRAPHGUARD_CHAOS) and assert every fault is contained,

@@ -210,6 +210,45 @@ def gradcheck_bench(rows, out, repeats=None):
                      len(rep.params)))
 
 
+def servecheck_bench(rows, out, repeats=None):
+    """Serving-path verification (repro.servecheck): wall/infer time per
+    serve strategy — decode-step obligations deduped by position class
+    plus the prefill-read chain.  sp_cache is excluded from the timed set
+    (its read obligation is ~17 s at degree 2 — tier-1 tests cover it);
+    the case list is identical in smoke and full runs so the bench gate
+    (scripts/check_bench.py) can require every baseline case."""
+    import statistics as _st
+
+    from repro.servecheck import check_serve
+    repeats = repeats or REPEATS
+    sec = out.setdefault("servecheck", {})
+    cases = [("tp_decode", 2), ("batched_decode", (2, 2))]
+    for strategy, degree in cases:
+        def one():
+            rep = check_serve(strategy, degree=degree, workers=0)
+            assert rep.verdict == "certificate", \
+                f"serve@{strategy}: {rep.verdict} ({rep.failing_steps})"
+            return rep
+        one()                                          # warmup
+        walls, infers, rep = [], [], None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            rep = one()
+            walls.append((time.perf_counter() - t0) * 1e3)
+            infers.append(rep.timing()["infer_s_sum"] * 1e3)
+        from repro.api import degree_token
+        key = f"serve@{strategy}@deg{degree_token(degree)}"
+        sec[key] = {
+            "wall_ms": round(_st.median(walls), 3),
+            "infer_ms": round(_st.median(infers), 3),
+            "total_steps": rep.total_steps,
+            "unique_obligations": rep.unique_obligations,
+            "dedup_ratio": rep.dedup_ratio,
+        }
+        rows.append((f"servecheck/{key}", sec[key]["wall_ms"] * 1e3,
+                     rep.unique_obligations))
+
+
 def suite_runner(rows, out, repeats=None):
     """Suite process-pool runner vs sequential run_case looping.
 
@@ -443,10 +482,11 @@ def main(argv=None) -> None:
         lambda: fig5_scaling(rows, out, repeats),
         lambda: modelcheck_bench(rows, out, repeats),
         lambda: gradcheck_bench(rows, out, repeats),
+        lambda: servecheck_bench(rows, out, repeats),
         lambda: runtime_bench(rows, out, repeats),
     ]
     names = ["fig4_verification_time", "fig5_scaling", "modelcheck_bench",
-             "gradcheck_bench", "runtime_bench"]
+             "gradcheck_bench", "servecheck_bench", "runtime_bench"]
     if not args.smoke:
         sections += [
             lambda: fam_scaling(rows, out, repeats),

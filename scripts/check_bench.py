@@ -32,6 +32,7 @@ SECTION_METRICS = {
     "fig5": "infer_ms",
     "modelcheck": "infer_ms",
     "gradcheck": "infer_ms",
+    "servecheck": "infer_ms",
     "runtime": "warm_wall_ms",
 }
 

@@ -47,6 +47,20 @@ case "$target" in
                  echo "injected grad bug not localized (rc=$rc, want 1)" >&2
                  exit 1
                fi ;;
+  # serving-path smoke: tp_decode certifies (decode chain refines prefill);
+  # the injected stale-cache-shard bug localizes to its decode step.  rc
+  # must be exactly 1 (bug detected AND localized) — rc 2 means
+  # mis-localization, which must fail.
+  servecheck-smoke)
+               PYTHONPATH=src python -m repro.launch.verify \
+                 --serve tp_decode
+               rc=0
+               PYTHONPATH=src python -m repro.launch.verify \
+                 --serve tp_decode --inject-bug stale_cache_shard || rc=$?
+               if [ "$rc" -ne 1 ]; then
+                 echo "injected serve bug not localized (rc=$rc, want 1)" >&2
+                 exit 1
+               fi ;;
   # fault-tolerance gate: injected crashes/exits/hangs/cache corruption
   # must be contained, attributed to the afflicted task only, and survived
   # with byte-identical certificates elsewhere
@@ -54,6 +68,6 @@ case "$target" in
   # persistent-cache gate: cold commits, warm hits byte-identically, torn
   # journal lines recovered with only the damaged entry re-proved
   cache-smoke) PYTHONPATH=src python scripts/cache_smoke.py ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|chaos-smoke|cache-smoke)" >&2
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|servecheck-smoke|chaos-smoke|cache-smoke)" >&2
      exit 2 ;;
 esac

@@ -15,9 +15,10 @@ cases with ``@register_strategy`` without touching core.
 from .spec import (BugSpec, Degree, StrategySpec, EXPECTATIONS, axis_degrees,
                    degree_token, normalize_degree, parse_degree, task_id)
 from .registry import (DuplicateStrategyError, RegisteredStrategy, bug_host,
-                       build_spec, check_model_task, check_train_task,
-                       get_strategy, list_bugs, list_model_tasks,
-                       list_strategies, list_train_tasks, register_strategy)
+                       build_spec, check_model_task, check_serve_task,
+                       check_train_task, get_strategy, list_bugs,
+                       list_model_tasks, list_serve_tasks, list_strategies,
+                       list_train_tasks, register_strategy)
 from .report import Report, VERDICTS
 from .runner import run_spec, verify
 from .suite import Suite, SuiteResult, SuiteTask
@@ -28,9 +29,9 @@ __all__ = [
     "BugSpec", "Degree", "StrategySpec", "EXPECTATIONS", "axis_degrees",
     "degree_token", "normalize_degree", "parse_degree", "task_id",
     "DuplicateStrategyError", "RegisteredStrategy", "bug_host", "build_spec",
-    "check_model_task", "check_train_task", "get_strategy", "list_bugs",
-    "list_model_tasks", "list_strategies", "list_train_tasks",
-    "register_strategy",
+    "check_model_task", "check_serve_task", "check_train_task",
+    "get_strategy", "list_bugs", "list_model_tasks", "list_serve_tasks",
+    "list_strategies", "list_train_tasks", "register_strategy",
     "Report", "VERDICTS", "run_spec", "verify", "Suite", "SuiteResult",
     "SuiteTask",
 ]

@@ -250,3 +250,32 @@ def check_train_task(task: str, **kw):
                        f"`train@strategy` like `train@dp_accum`")
     from ..gradcheck import check_train
     return check_train(strategy, **kw)
+
+
+# ---------------------------------------------------------------------------
+# serving-path tasks (repro.servecheck)
+# ---------------------------------------------------------------------------
+# Serving-path verification tasks live beside the case, ``model@plan`` and
+# ``train@strategy`` registries under ``serve@strategy`` ids (e.g.
+# ``serve@tp_decode``) — resolved lazily so importing ``repro.api`` does
+# not pull servecheck in.
+
+def list_serve_tasks() -> Tuple[str, ...]:
+    """``serve@strategy`` ids: every registered serving strategy."""
+    from ..servecheck import list_serve_strategies
+    return tuple(f"serve@{s}" for s in list_serve_strategies())
+
+
+def check_serve_task(task: str, **kw):
+    """Run one ``serve@strategy`` serving-path task -> ``ServeReport``.
+
+    Keyword arguments pass through to
+    :func:`repro.servecheck.check_serve` (``degree=``, ``bug=``,
+    ``workers=``, ``engine_opts=``, ...).
+    """
+    prefix, sep, strategy = str(task).partition("@")
+    if not sep or prefix != "serve" or not strategy:
+        raise KeyError(f"bad serve task `{task}` — expected "
+                       f"`serve@strategy` like `serve@tp_decode`")
+    from ..servecheck import check_serve
+    return check_serve(strategy, **kw)

@@ -869,6 +869,16 @@ def _instantiate(term: Term, tag: str, coords, axis_names, sizes, group,
         args = tuple(go(a) for a in t.args)
         if t.op in ("dyn_slice", "dyn_update_slice"):
             return _fold_dynamic(t, args)
+        if t.op == "select":
+            # rank-conditional writes (``jnp.where(axis_index(a) == k, ...)``)
+            # fold per rank once axis_index is a literal: chase the predicate
+            # through its broadcast and take the branch it selects
+            pred = args[0]
+            while pred.op == "broadcast":
+                pred = pred.args[0]
+            v = _fold_scalar(pred)
+            if v is not None:
+                return args[1] if v else args[2]
         return Term(t.op, args, t.attrs, t.shape, t.dtype)
 
     return go(term)

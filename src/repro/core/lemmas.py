@@ -23,8 +23,8 @@ import numpy as np
 
 from .egraph import EGraph, ENode, Lemma
 from .terms import (EW1_OPS, EW2_OPS, REDUCE_OPS, Term, add_n, bmm, broadcast,
-                    concat, convert, ew1, ew2, gather_rows, integer_pow, lit,
-                    matmul, reduce_, reshape, select, slice_, transpose)
+                    concat, convert, dus, ew1, ew2, gather_rows, integer_pow,
+                    lit, matmul, reduce_, reshape, select, slice_, transpose)
 
 # Widest n-ary add the normal form maintains: a 16-rank multi-axis psum is a
 # 16-ary node; flattening stops growing chains past this (soundness is
@@ -1020,6 +1020,61 @@ def _dus_concat(eg: EGraph, node: ENode, cid: int):
     return [(cid, concat([cls(eg, c) for _, _, c in pieces], d))]
 
 
+def _dus_unfold(eg: EGraph, node: ENode, cid: int):
+    """A dynamic_update_slice is the concat of the untouched prefix, the
+    written window, and the untouched suffix along the first dim the update
+    does not cover in full:
+
+        dus(x, u, s) = concat(x[:s_d], inner, x[s_d+u_d:], dim=d)
+
+    where ``inner`` is ``u`` itself when ``d`` is the only partial dim, and
+    a residual dus into the sliced slab otherwise (peeling one dim per
+    fire).  This is the cache-write normal form servecheck's decode-step
+    obligations reduce through: a KV-cache write meets its per-rank sharded
+    implementation in slice/concat algebra, where the block lemmas and the
+    relation machinery live, instead of as an opaque dus.
+
+    Bounded: one concat and at most two slices per fire, at most ``ndim``
+    fires per chain link (chain *heads* over a zero buffer additionally
+    collapse to a flat concat via ``dus_concat``)."""
+    cx, cu = node.children
+    starts = dict(node.attrs)["starts"]
+    base_shape = eg.info(cid).shape
+    u_shape = eg.info(cu).shape
+    nd = len(base_shape)
+    if len(u_shape) != nd:
+        return []
+    d = next((i for i in range(nd)
+              if not (starts[i] == 0 and u_shape[i] == base_shape[i])), None)
+    if d is None:
+        return []                        # full overwrite — dus_full's case
+    x, u = cls(eg, cx), cls(eg, cu)
+    lo, hi = starts[d], starts[d] + u_shape[d]
+    if hi > base_shape[d]:
+        return []                        # malformed write — leave it opaque
+    others_partial = any(
+        i != d and not (starts[i] == 0 and u_shape[i] == base_shape[i])
+        for i in range(nd))
+    if others_partial:
+        slab = slice_(x, tuple(lo if i == d else 0 for i in range(nd)),
+                      tuple(hi if i == d else base_shape[i]
+                            for i in range(nd)))
+        inner = dus(slab, u, tuple(0 if i == d else starts[i]
+                                   for i in range(nd)))
+    else:
+        inner = u
+    pieces = []
+    if lo > 0:
+        pieces.append(slice_(x, (0,) * nd,
+                             tuple(lo if i == d else base_shape[i]
+                                   for i in range(nd))))
+    pieces.append(inner)
+    if hi < base_shape[d]:
+        pieces.append(slice_(x, tuple(hi if i == d else 0 for i in range(nd)),
+                             base_shape))
+    return [(cid, concat(pieces, d))]
+
+
 def _lit_of(eg: EGraph, cid: int, _seen: Optional[set] = None):
     """Return the scalar literal value if this class is lit or broadcast(lit).
     Cycle-safe: merged classes can hold broadcast chains that loop."""
@@ -1212,6 +1267,7 @@ LEMMAS: list[Lemma] = [
     Lemma("neg_neg", {"neg"}, _neg_identity),
     Lemma("dus_full", {"dus"}, _dus_full),
     Lemma("dus_concat", {"dus"}, _dus_concat),
+    Lemma("dus_unfold", {"dus"}, _dus_unfold),
     Lemma("convert_fold", {"convert"}, _convert_convert),
 ]
 

@@ -18,14 +18,23 @@ forward specs):
     python -m repro.launch.verify --train dp_accum \
         [--inject-bug accum_no_rescale] [--degree 2] [--workers 2] [--json]
 
+Serving-path verification (the ``repro.servecheck`` subsystem —
+sharded-KV-cache decode steps deduped by position class, plus the
+prefill read proving the chain composes):
+
+    python -m repro.launch.verify --serve tp_decode \
+        [--inject-bug stale_cache_shard] [--degree 2] [--workers 2] [--json]
+
 The case matrix lives in the ``repro.api`` registry (populated by
 ``repro.dist.strategies``); model-level tasks resolve through
-``repro.modelcheck`` and train-step tasks through ``repro.gradcheck``.
-``--list`` prints all three with a kind tag per entry.  ``--json`` emits
-the structured report (a ``repro.api.Report``, ``ModelReport``, or
-``TrainReport``) wrapped in a stable envelope carrying ``schema_version``
-and per-phase ``timing`` stats so downstream tooling can gate on it.  For
-matrix runs use the suite runner: ``python -m repro.api``.
+``repro.modelcheck``, train-step tasks through ``repro.gradcheck`` and
+serving tasks through ``repro.servecheck``.  ``--list`` prints all four
+with a kind tag per entry.  ``--json`` emits the structured report (a
+``repro.api.Report``, ``ModelReport``, ``TrainReport``, or
+``ServeReport``) wrapped in a stable envelope carrying
+``schema_version`` and per-phase ``timing`` stats so downstream tooling
+can gate on it.  For matrix runs use the suite runner:
+``python -m repro.api``.
 """
 from __future__ import annotations
 
@@ -63,11 +72,14 @@ def _print_registry():
 
     ``[case]`` single-layer strategies (``--case``), ``[model]``
     whole-model tasks (``--model``/``--plan``), ``[train]`` training-step
-    tasks (``--train``) — the three task registries side by side.
+    tasks (``--train``), ``[serve]`` serving-path tasks (``--serve``) —
+    the four task registries side by side.
     """
     from ..gradcheck import get_train_strategy, list_train_bugs
+    from ..servecheck import get_serve_strategy, list_serve_bugs
 
-    print("registered tasks (kind-tagged; see --case / --model / --train):")
+    print("registered tasks (kind-tagged; see --case / --model / --train "
+          "/ --serve):")
     for name in list_strategies():
         entry = get_strategy(name)
         bugs = ", ".join(entry.bug_names()) or "-"
@@ -83,6 +95,13 @@ def _print_registry():
         degs = "/".join(degree_token(d) for d in entry.degrees)
         print(f"  [train] {task:16s} degrees={degs:10s} "
               f"params={','.join(entry.params):8s} bugs: {bugs}")
+    from ..api import list_serve_tasks
+    for task in list_serve_tasks():
+        entry = get_serve_strategy(task.partition("@")[2])
+        bugs = ", ".join(entry.bug_names()) or "-"
+        degs = "/".join(degree_token(d) for d in entry.degrees)
+        print(f"  [serve] {task:16s} degrees={degs:10s} "
+              f"steps={entry.n_steps:<8d} bugs: {bugs}")
     from ..modelcheck.decompose import BUGS as MODEL_BUGS
 
     print("registered bugs (bug -> host, detection):")
@@ -92,6 +111,8 @@ def _print_registry():
         print(f"  [model] {bug:22s} -> --model tasks (refinement_error)")
     for bug, (host, bspec) in sorted(list_train_bugs().items()):
         print(f"  [train] {bug:22s} -> train@{host:12s} ({bspec.expected})")
+    for bug, (host, bspec) in sorted(list_serve_bugs().items()):
+        print(f"  [serve] {bug:22s} -> serve@{host:12s} ({bspec.expected})")
 
 
 def _json_envelope(kind: str, report_json: dict, timing: dict) -> str:
@@ -185,6 +206,43 @@ def _run_train(args, cache) -> int:
     return 0 if report.ok else 1
 
 
+def _run_serve(args, cache) -> int:
+    from ..servecheck import check_serve
+    from ..servecheck.schedule import DEFAULT_TIMEOUT_S
+    try:
+        report = check_serve(args.serve, degree=args.degree,
+                             bug=args.inject_bug, workers=args.workers,
+                             timeout_s=args.timeout or DEFAULT_TIMEOUT_S,
+                             cache=cache)
+    except (KeyError, ValueError) as e:
+        print(f"[servecheck] {e}", file=sys.stderr)
+        return 2
+    if args.json:
+        print(_json_envelope("serve", report.to_json(), report.timing()))
+    else:
+        print(report.to_markdown())
+        if report.verdict == "certificate":
+            print(f"SERVING-PATH REFINEMENT HOLDS ({report.total_steps} "
+                  f"serving blocks proved by {report.unique_obligations} "
+                  f"obligations, dedup {report.dedup_ratio:.1f}x — decode "
+                  f"chain refines full-sequence prefill)")
+        else:
+            print(f"SERVING-PATH VERDICT: {report.verdict} — failing "
+                  f"steps {report.failing_steps}")
+    # exit codes mirror the model/train paths: 0 clean certificate; 1
+    # expected failure (injected serving bug detected AND localized to
+    # its decode step — report.ok encodes that); 2 a harness problem, so
+    # CI gates that assert rc==1 catch mis-localization.
+    if args.inject_bug is not None:
+        if not report.ok:
+            print(f"[servecheck] injected bug NOT correctly localized "
+                  f"(expected step{report.bug_step}, failing steps "
+                  f"{report.failing_steps})", file=sys.stderr)
+            return 2
+        return 1
+    return 0 if report.ok else 1
+
+
 def _case_report(args, cache) -> dict:
     """Run the single case through the shared runtime so ``--timeout`` and
     ``--cache`` behave exactly as they do for suite/model/train runs."""
@@ -231,7 +289,9 @@ def main(argv=None):
                     help="inject a bug class (must be hosted by --case)")
     from ..gradcheck import list_train_bugs, list_train_strategies
     from ..modelcheck.decompose import BUGS as model_bugs
+    from ..servecheck import list_serve_bugs, list_serve_strategies
     train_bugs = sorted(list_train_bugs())
+    serve_bugs = sorted(list_serve_bugs())
     ap.add_argument("--degree", type=parse_degree, default=None,
                     help="int, or per-mesh-axis like `4x2` for 2D cases "
                          "(default: 2 for --case, the strategy's first "
@@ -245,11 +305,17 @@ def main(argv=None):
                     choices=list_train_strategies(),
                     help="training-step verification: a train strategy "
                          "like `dp_accum` (see --list)")
+    ap.add_argument("--serve", default=None,
+                    choices=list_serve_strategies(),
+                    help="serving-path verification: a serve strategy "
+                         "like `tp_decode` (see --list)")
     ap.add_argument("--inject-bug", default=None,
-                    choices=tuple(model_bugs) + tuple(train_bugs),
+                    choices=tuple(model_bugs) + tuple(train_bugs)
+                    + tuple(serve_bugs),
                     help="inject a whole-model bug into one layer "
-                         "(--model) or a gradient bug into one parameter "
-                         "(--train)")
+                         "(--model), a gradient bug into one parameter "
+                         "(--train), or a serving bug into one decode "
+                         "step (--serve)")
     ap.add_argument("--bug-layer", type=int, default=None,
                     help="layer index for --model --inject-bug "
                          "(default: middle)")
@@ -278,14 +344,17 @@ def main(argv=None):
     from ..api.suite import cache_from_args
     from ..runtime import resolve_cache
     cache = resolve_cache(cache_from_args(args))
-    if args.model is not None and args.train is not None:
-        ap.error("--model and --train are separate paths")
+    if sum(x is not None for x in (args.model, args.train, args.serve)) > 1:
+        ap.error("--model, --train and --serve are separate paths")
     if args.model is not None:
         if args.case is not None or args.bug is not None:
             ap.error("--model/--plan and --case/--bug are separate paths")
         if args.inject_bug in train_bugs:
             ap.error(f"--inject-bug {args.inject_bug} is a gradient bug — "
                      f"it requires --train")
+        if args.inject_bug in serve_bugs:
+            ap.error(f"--inject-bug {args.inject_bug} is a serving bug — "
+                     f"it requires --serve")
         rc = _run_model(args, cache)
         if rc:
             sys.exit(rc)
@@ -296,6 +365,9 @@ def main(argv=None):
         if args.inject_bug in model_bugs:
             ap.error(f"--inject-bug {args.inject_bug} is a whole-model "
                      f"bug — it requires --model")
+        if args.inject_bug in serve_bugs:
+            ap.error(f"--inject-bug {args.inject_bug} is a serving bug — "
+                     f"it requires --serve")
         if args.bug_layer is not None:
             ap.error("--bug-layer applies to --model (gradient bugs "
                      "localize to a parameter, not a layer)")
@@ -303,10 +375,26 @@ def main(argv=None):
         if rc:
             sys.exit(rc)
         return
+    if args.serve is not None:
+        if args.case is not None or args.bug is not None:
+            ap.error("--serve and --case/--bug are separate paths")
+        if args.inject_bug in model_bugs:
+            ap.error(f"--inject-bug {args.inject_bug} is a whole-model "
+                     f"bug — it requires --model")
+        if args.inject_bug in train_bugs:
+            ap.error(f"--inject-bug {args.inject_bug} is a gradient bug — "
+                     f"it requires --train")
+        if args.bug_layer is not None:
+            ap.error("--bug-layer applies to --model (serving bugs "
+                     "localize to a decode step, not a layer)")
+        rc = _run_serve(args, cache)
+        if rc:
+            sys.exit(rc)
+        return
     if args.inject_bug is not None or args.bug_layer is not None \
             or args.workers is not None:
-        ap.error("--inject-bug/--bug-layer/--workers require --model or "
-                 "--train (the case path takes --bug)")
+        ap.error("--inject-bug/--bug-layer/--workers require --model, "
+                 "--train or --serve (the case path takes --bug)")
     if args.case is None:
         args.case = "tp_layer"
     if args.degree is None:

@@ -38,6 +38,16 @@ FAMILY_SUPPORT = {
     "audio": None,      # encoder-decoder frontend
 }
 
+# why each unsupported family is unsupported — surfaced in the
+# ModelCheckError so the CLI user learns the actual blocker, not just
+# the verdict
+FAMILY_BLOCKERS = {
+    "ssm": "cross-rank prefix scans need a cumsum lemma family",
+    "hybrid": "the RG-LRU recurrence needs the same cross-rank scan lemmas",
+    "audio": "the encoder-decoder cross-attention frontend is not "
+             "block-decomposable yet",
+}
+
 BUGS = ("wrong_spec",)
 
 
@@ -112,10 +122,13 @@ def _resolve(model: Union[str, ModelConfig],
         cfg = load_config(mid)
     support = FAMILY_SUPPORT.get(cfg.family)
     if not support:
+        why = FAMILY_BLOCKERS.get(
+            cfg.family, f"family `{cfg.family}` is not registered")
         raise ModelCheckError(
-            f"model `{mid}` (family `{cfg.family}`) is not decomposable yet "
-            f"— supported families: "
-            f"{sorted(k for k, v in FAMILY_SUPPORT.items() if v)}")
+            f"model `{mid}` is in family `{cfg.family}`, which modelcheck "
+            f"cannot decompose yet ({why}) — supported families: "
+            f"{sorted(k for k, v in FAMILY_SUPPORT.items() if v)}; "
+            f"checkable models: {list(supported_models())}")
     if isinstance(plan, str):
         plan = parse_plan(plan)
     return mid, cfg, plan

@@ -153,7 +153,10 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos):
     def body(xc, blk_and_cache):
         blk, (sk, sv, ck_, cv_) = blk_and_cache
         h = L.rmsnorm(xc, blk["pre_self"], cfg.norm_eps)
-        h, sk, sv = L.attention_decode(blk["self_attn"], cfg, h, sk, sv, pos)
+        # sinusoid positions are added at the embedding; no RoPE anywhere
+        # in this family's forward, so none in decode either
+        h, sk, sv = L.attention_decode(blk["self_attn"], cfg, h, sk, sv, pos,
+                                       rope=False)
         xc = xc + h
         # cross attention against cached encoder K/V (no mask)
         h = L.rmsnorm(xc, blk["pre_cross"], cfg.norm_eps)

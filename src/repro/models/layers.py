@@ -252,9 +252,13 @@ def attention(p, cfg: ModelConfig, x, positions, *, causal=True, window=0,
 
 
 def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
-                     window=0, theta=None):
+                     window=0, theta=None, rope=True):
     """Single-token decode. cache_{k,v}: (B, C, KV, hd). ``window`` selects
-    ring-buffer semantics (C == window) vs linear cache (C == max seq)."""
+    ring-buffer semantics (C == window) vs linear cache (C == max seq).
+    ``rope=False`` for families whose prefill attention runs unrotated
+    (absolute/sinusoid embeddings, e.g. whisper's decoder self-attention) —
+    decode must rotate exactly when prefill does, or the two paths diverge
+    at every position past 0."""
     B, S1, D = x.shape
     assert S1 == 1
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -267,10 +271,11 @@ def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
     v_new = (x @ p["wv"]).reshape(B, 1, kv, hd)
     if cfg.use_bias:
         v_new = v_new + p["bv"].reshape(1, 1, kv, hd)
-    posv = jnp.full((B, 1), pos)
-    ang = rope_angles(posv, hd, theta)
-    q = apply_rope(q, ang)
-    k_new = apply_rope(k_new, ang)
+    if rope:
+        posv = jnp.full((B, 1), pos)
+        ang = rope_angles(posv, hd, theta)
+        q = apply_rope(q, ang)
+        k_new = apply_rope(k_new, ang)
     slot = pos % C if window > 0 else pos  # ring buffer vs linear cache
     cache_k = jax.lax.dynamic_update_slice(cache_k, k_new, (0, slot, 0, 0))
     cache_v = jax.lax.dynamic_update_slice(cache_v, v_new, (0, slot, 0, 0))

@@ -85,7 +85,7 @@ def engine_fingerprint() -> str:
     unchanged code + edited model."""
     pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     subdirs = ("core", "dist", "models", "sharding", "modelcheck",
-               "gradcheck", "optim")
+               "gradcheck", "servecheck", "optim")
     files = [os.path.join(pkg, "api", "spec.py"),
              os.path.join(pkg, "api", "runner.py")]
     for sub in subdirs:
@@ -136,6 +136,16 @@ def strategy_cache_key(spec, engine_opts: Optional[dict] = None) -> str:
     ]
     digest = hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
     return f"spec:{spec.name}-{digest}:{_engine_token(engine_opts)}"
+
+
+def serve_cache_key(strategy: str, canonical: str,
+                    engine_opts: Optional[dict] = None) -> str:
+    """Cache key for a servecheck obligation: the strategy name plus the
+    obligation's content digest (``modelcheck.obligations.canonical_key``
+    already hashes mesh + shapes + specs + structure facts, including the
+    position class and any injected bug)."""
+    digest = canonical.rsplit("-", 1)[-1]
+    return f"serve:{strategy}-{digest}:{_engine_token(engine_opts)}"
 
 
 def cacheable_report(value: Any) -> bool:

@@ -14,11 +14,21 @@ def prefill_logits(params, cfg: ModelConfig, batch: dict):
     return logits
 
 
-def sequential_prefill(params, cfg: ModelConfig, tokens, max_seq: int):
+def sequential_prefill(params, cfg: ModelConfig, tokens, max_seq: int,
+                       frames=None):
     """Build a KV cache by scanning decode_step over the prompt (universal
-    across families; used by the serving example at small scale)."""
+    across families; used by the serving example at small scale).
+
+    ``frames`` (encoder-decoder only): encoder input; the per-layer cross
+    K/V is precomputed into the cache, as decode_step expects.
+    """
     B, S = tokens.shape
     cache = registry.init_cache(cfg, B, max_seq)
+    if frames is not None:
+        from ..models import encdec
+        ck, cv = encdec.build_cross_cache(
+            params, cfg, encdec.encode(params, cfg, frames))
+        cache = dict(cache, cross_k=ck, cross_v=cv)
 
     def body(carry, i):
         cache = carry

@@ -316,7 +316,14 @@ def test_dus_concat_lemma():
     ce = eg.extract_clean(c_full, lambda n: n.endswith("@d"))
     assert ce is not None and ce.op == "concat"
     assert [a.name for a in ce.args] == ["u0@d", "u1@d"]
-    assert eg.extract_clean(c_part, lambda n: n.endswith("@d")) is None
+    # the incomplete chain must not collapse to a concat of updates only;
+    # dus_unfold may soundly express it as u0 ++ zeros-suffix
+    ce_p = eg.extract_clean(c_part, lambda n: n.endswith("@d"))
+    if ce_p is not None:
+        assert not all(a.op == "tensor" for a in ce_p.args)
+        env_p = {"u0@d": 3 * np.ones((2, 3))}
+        np.testing.assert_allclose(eval_term(ce_p, env_p),
+                                   eval_term(partial, env_p))
     # numeric soundness of the rewrite
     env = {"u0@d": np.ones((2, 3)), "u1@d": 2 * np.ones((2, 3))}
     np.testing.assert_allclose(eval_term(ce, env), eval_term(full, env))
@@ -339,6 +346,52 @@ def test_dus_concat_rejects_full_buffer_write():
     assert ce is not None and ce.op == "tensor" and ce.name == "uf@d"
     env = {"u1@d": np.ones((2, 2)), "uf@d": 7 * np.ones((2, 4))}
     np.testing.assert_allclose(eval_term(ce, env), eval_term(chain, env))
+
+
+def test_dus_concat_out_of_order_chain_sorts_by_position():
+    """servecheck's batched read writes cache rows out of order (positions
+    rotate per decode step: 2, 3, 0, 1).  The chain still exactly tiles the
+    buffer, so dus_concat must fire — with pieces sorted by *position*, not
+    write order."""
+    eg = EGraph()
+    zeros = T.broadcast(T.lit(0.0), (4, 3), ())
+    us = [T.tensor(f"u{i}@d", (1, 3)) for i in range(4)]
+    chain = zeros
+    for pos in (2, 3, 0, 1):
+        chain = T.dus(chain, us[pos], (pos, 0))
+    c = eg.add_term(chain)
+    eg.rebuild()
+    eg.saturate(all_lemmas())
+    ce = eg.extract_clean(c, lambda n: n.endswith("@d"))
+    assert ce is not None and ce.op == "concat"
+    assert [a.name for a in ce.args] == ["u0@d", "u1@d", "u2@d", "u3@d"]
+    env = {f"u{i}@d": (i + 1) * np.ones((1, 3)) for i in range(4)}
+    np.testing.assert_allclose(eval_term(ce, env), eval_term(chain, env))
+
+
+def test_dus_concat_bails_on_chain_not_starting_at_zero():
+    """Soundness regression (the servecheck proofs lean on this bail): a
+    chain whose tiles cover only [2, 6) of a 6-row buffer must NOT rewrite
+    as the bare concat of its updates — rows [0, 2) are still the zero
+    init.  Whatever the engine does extract must stay numerically equal to
+    the original chain (dus_unfold may legitimately express it as
+    zeros-prefix ++ updates)."""
+    eg = EGraph()
+    zeros = T.broadcast(T.lit(0.0), (6, 3), ())
+    u0 = T.tensor("u0@d", (2, 3)); u1 = T.tensor("u1@d", (2, 3))
+    chain = T.dus(T.dus(zeros, u0, (2, 0)), u1, (4, 0))
+    c = eg.add_term(chain)
+    eg.rebuild()
+    eg.saturate(all_lemmas())
+    ce = eg.extract_clean(c, lambda n: n.endswith("@d"))
+    if ce is not None:
+        # the unsound flat rewrite would be concat(u0, u1) — shape (4, 3)
+        assert not (ce.op == "concat"
+                    and all(a.op == "tensor" for a in ce.args))
+        env = {"u0@d": np.ones((2, 3)), "u1@d": 2 * np.ones((2, 3))}
+        got, want = eval_term(ce, env), eval_term(chain, env)
+        assert got.shape == want.shape == (6, 3)
+        np.testing.assert_allclose(got, want)
 
 
 def test_reduce_reshape_lemma():

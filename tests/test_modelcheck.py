@@ -96,12 +96,28 @@ def test_bug_splits_dedup_class():
 
 
 def test_unsupported_family_raises():
-    with pytest.raises(ModelCheckError, match="family"):
-        decompose("mamba2-1.3b", "dp2")
     with pytest.raises(ModelCheckError, match="unknown model"):
         decompose("nope", "dp2")
     with pytest.raises(ModelCheckError, match="bug_layer"):
         decompose("gpt", "dp2", bug="wrong_spec", bug_layer=99)
+
+
+@pytest.mark.parametrize("model,family,why_fragment", [
+    ("mamba2-1.3b", "ssm", "cumsum lemma"),
+    ("recurrentgemma-2b", "hybrid", "RG-LRU"),
+    ("whisper-medium", "audio", "encoder-decoder"),
+])
+def test_unsupported_family_error_is_actionable(model, family, why_fragment):
+    """The unsupported-config error must name the config's actual family,
+    the reason that family is blocked, and what IS checkable."""
+    with pytest.raises(ModelCheckError) as ei:
+        decompose(model, "dp2")
+    msg = str(ei.value)
+    assert f"family `{family}`" in msg
+    assert why_fragment in msg
+    assert "supported families: ['dense', 'moe', 'vlm']" in msg
+    for mid in supported_models():
+        assert mid in msg
 
 
 def test_obligation_key_ignores_fn_identity():

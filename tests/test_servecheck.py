@@ -1,0 +1,255 @@
+"""repro.servecheck: serving strategies certify that sharded KV-cache
+decode refines full-sequence prefill, decode steps dedup by position
+class (N steps -> O(1) obligations), injected serving bugs localize to
+exactly their decode step, and the reports are deterministic across
+worker counts and replayable from the persistent certificate cache."""
+import json
+
+import pytest
+
+from repro.api import check_serve_task, list_serve_tasks
+from repro.launch.verify import main as verify_main
+from repro.runtime import CertificateCache, serve_cache_key
+from repro.servecheck import (ServeReport, check_serve, get_serve_strategy,
+                              list_serve_bugs, list_serve_strategies,
+                              register_serve_strategy)
+
+ALL_SERVE = list_serve_strategies()
+ALL_SERVE_BUGS = sorted(list_serve_bugs())
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_serve_registry_covers_strategies_and_bugs():
+    assert set(ALL_SERVE) == {"tp_decode", "sp_cache", "batched_decode"}
+    assert set(ALL_SERVE_BUGS) == {"stale_cache_shard", "pos_off_by_one",
+                                   "cache_gather_wrong_axis"}
+    assert list_serve_tasks() == tuple(f"serve@{s}" for s in ALL_SERVE)
+    # every strategy is swept at two degrees (tentpole acceptance)
+    assert get_serve_strategy("tp_decode").degrees == (2, 4)
+    assert get_serve_strategy("sp_cache").degrees == (2, 4)
+    assert get_serve_strategy("batched_decode").degrees == ((2, 2), (2, 4))
+
+
+def test_serve_registry_guards():
+    with pytest.raises(KeyError, match="unknown serve strategy"):
+        get_serve_strategy("no_such")
+    # a bug run on a non-host strategy would silently certify the clean
+    # path — both the build and check_serve entry points must refuse
+    with pytest.raises(ValueError, match="belongs to serve strategy"):
+        get_serve_strategy("tp_decode").build(bug="pos_off_by_one")
+    with pytest.raises(ValueError, match="not hosted"):
+        check_serve("tp_decode", bug="pos_off_by_one")
+    with pytest.raises(ValueError, match="single-axis"):
+        check_serve("tp_decode", degree=(2, 2))
+    with pytest.raises(ValueError, match="dividing"):
+        check_serve("tp_decode", degree=3)
+    with pytest.raises(ValueError, match="dividing"):
+        check_serve("sp_cache", degree=3)
+    with pytest.raises(ValueError, match="dp must be 2"):
+        check_serve("batched_decode", degree=(4, 2))
+    # the wrong-axis gather only type-checks on a square mesh
+    with pytest.raises(ValueError, match="square mesh"):
+        check_serve("batched_decode", degree=(2, 4),
+                    bug="cache_gather_wrong_axis")
+    with pytest.raises(ValueError, match="already registered"):
+        register_serve_strategy("tp_decode", n_steps=1)(
+            lambda degree=2, bug=None: {})
+    with pytest.raises(KeyError, match="bad serve task"):
+        check_serve_task("tp_decode")          # missing the serve@ prefix
+
+
+# ---------------------------------------------------------------------------
+# position-class dedup: N decode steps -> O(1) obligations
+# ---------------------------------------------------------------------------
+
+def test_position_class_dedup_counts():
+    # tp_decode: 8 steps collapse to first/mid/last + the read
+    obs = get_serve_strategy("tp_decode").build(degree=2)
+    assert (obs.total_blocks, obs.n_unique) == (9, 4)
+    # sp_cache deg2: local offsets lfirst/lmid/llast + the read
+    obs = get_serve_strategy("sp_cache").build(degree=2)
+    assert (obs.total_blocks, obs.n_unique) == (9, 4)
+    # sp_cache deg4: 2-row shards have no lmid class
+    obs = get_serve_strategy("sp_cache").build(degree=4)
+    assert (obs.total_blocks, obs.n_unique) == (9, 3)
+    # batched_decode: rotated positions — every step its own class
+    # (the documented contrast case: dedup ratio 1)
+    obs = get_serve_strategy("batched_decode").build(degree=(2, 2))
+    assert (obs.total_blocks, obs.n_unique) == (5, 5)
+
+
+def test_bug_splits_its_position_class():
+    """Injecting a bug changes the step's structure fingerprint, splitting
+    it out of its class — that split is what localization rides on."""
+    clean = get_serve_strategy("tp_decode").build(degree=2)
+    bugged = get_serve_strategy("tp_decode").build(
+        degree=2, bug="stale_cache_shard")
+    assert bugged.n_unique == clean.n_unique + 1
+    # and only the bugged step moved: step2 / step4 still share step3's
+    # old class key in the clean set but not with bugged step3
+    key = dict(bugged.blocks)
+    assert key["step3"] != key["step2"] == key["step4"]
+
+
+# ---------------------------------------------------------------------------
+# clean certification + bug localization
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tp_report():
+    return check_serve("tp_decode")
+
+
+def test_tp_decode_certifies(tp_report):
+    r = tp_report
+    assert r.ok and r.verdict == "certificate", r.failing_steps
+    assert not r.failing_steps
+    assert (r.total_steps, r.unique_obligations) == (9, 4)
+    assert r.dedup_ratio == 2.25
+    for s in r.steps:
+        assert s.verdict == "certificate" and s.relation_ok
+    # class siblings replay their class representative's obligation
+    assert sum(s.cached for s in r.steps) == 5
+
+
+@pytest.mark.parametrize("strategy", ["sp_cache", "batched_decode"])
+def test_other_strategies_certify(strategy):
+    r = check_serve(strategy)
+    assert r.ok and r.verdict == "certificate", (strategy, r.failing_steps)
+    for s in r.steps:
+        assert s.verdict == "certificate" and s.relation_ok
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ALL_SERVE)
+def test_serve_strategy_certifies_at_all_degrees(strategy):
+    # degrees[0] is covered by the fast tests above
+    for degree in get_serve_strategy(strategy).degrees[1:]:
+        r = check_serve(strategy, degree=degree)
+        assert r.ok and r.verdict == "certificate", \
+            (strategy, degree, r.failing_steps)
+
+
+@pytest.mark.parametrize("bug", ALL_SERVE_BUGS)
+def test_serve_bug_localizes_to_step(bug):
+    host, bspec = list_serve_bugs()[bug]
+    target = get_serve_strategy(host).bug_steps[bug]
+    r = check_serve(host, bug=bug, workers=1)
+    assert r.ok, (bug, r.verdict, r.failing_steps)
+    assert r.verdict == bspec.expected
+    # sharp localization: exactly the injected step fails; its
+    # position-class siblings (same class, no bug) stay clean
+    assert r.failing_steps == [f"step{target}"] and r.bug_step == target
+    by_step = {s.step: s for s in r.steps}
+    bad = by_step[f"step{target}"]
+    if bspec.expected == "refinement_error":
+        assert bad.verdict == "refinement_error" and bad.localized_op
+    else:                         # the seam-check (silent misplacement) mode
+        assert bad.verdict == "certificate" and not bad.relation_ok
+    for s in r.steps:
+        if s.step != bad.step:
+            assert s.verdict == "certificate" and s.relation_ok
+
+
+def test_wrong_axis_seam_detail():
+    """cache_gather_wrong_axis still *refines* (each request's cache is
+    reconstructible from the ranks that computed it) — the nested report
+    must show a certificate whose seam comparison failed, which is the
+    paper's silent-misplacement detection mode."""
+    r = check_serve("batched_decode", bug="cache_gather_wrong_axis",
+                    degree=(2, 2), workers=1)
+    key = dict(r.steps and [(s.step, s.obligation) for s in r.steps])["step1"]
+    rep = r.reports[key]
+    assert rep["verdict"] == "certificate"
+    seams = rep["seams"]
+    assert any(not s["ok"] for s in seams)
+    for s in seams:
+        if not s["ok"]:
+            assert s["expected"] != s["got"]
+
+
+# ---------------------------------------------------------------------------
+# report serialization + determinism + cache replay
+# ---------------------------------------------------------------------------
+
+def test_serve_report_json_roundtrip(tp_report):
+    blob = json.dumps(tp_report.to_json(), sort_keys=True)
+    back = ServeReport.from_json(json.loads(blob))
+    assert back.stable_summary() == tp_report.stable_summary()
+    assert back.task_id() == tp_report.task_id() == "serve@tp_decode@deg2"
+    md = tp_report.to_markdown()
+    assert "certificate" in md and "| read |" in md and "dedup 2.25x" in md
+
+
+def test_serve_report_identical_across_worker_counts():
+    a = check_serve("batched_decode", workers=1)
+    b = check_serve("batched_decode", workers=2)
+    assert a.workers != b.workers
+    assert a.stable_summary() == b.stable_summary()
+    # the certificates themselves, not just verdicts
+    assert {k: v["r_o"] for k, v in a.reports.items()} == \
+        {k: v["r_o"] for k, v in b.reports.items()}
+
+
+def test_serve_cache_key_format():
+    k = serve_cache_key("tp_decode", "serve_step-5-deadbeef0123", None)
+    assert k == "serve:tp_decode-deadbeef0123:mn400000"
+    assert serve_cache_key("tp_decode", "x-abc", {"max_nodes": 500}) \
+        == "serve:tp_decode-abc:mn500"
+
+
+def test_warm_cache_replays_serve_verdicts(tmp_path):
+    d = tmp_path / "c"
+    cold = check_serve("batched_decode", workers=1, cache=d)
+    assert cold.cache["misses"] == cold.unique_obligations
+    assert cold.cache["hits"] == 0
+    warm = check_serve("batched_decode", workers=1, cache=d)
+    assert warm.cache["hits"] == warm.unique_obligations
+    assert warm.cache["misses"] == 0
+    assert warm.stable_summary() == cold.stable_summary()
+    assert {k: v["r_o"] for k, v in warm.reports.items()} == \
+        {k: v["r_o"] for k, v in cold.reports.items()}
+    # entries are addressed under the serve: namespace, one per obligation
+    store = CertificateCache(d)
+    assert len(store) == cold.unique_obligations
+    for key in cold.reports:
+        assert serve_cache_key("batched_decode", key, None) in store
+
+
+# ---------------------------------------------------------------------------
+# api + CLI surface
+# ---------------------------------------------------------------------------
+
+def test_check_serve_task_api():
+    r = check_serve_task("serve@batched_decode")
+    assert r.ok and r.verdict == "certificate"
+    assert r.task_id() == "serve@batched_decode@deg2x2"
+
+
+def _envelope(capsys, argv):
+    try:
+        verify_main(argv)
+    except SystemExit as e:               # bug paths exit(1) by design
+        assert e.code in (None, 0, 1)
+    return json.loads(capsys.readouterr().out)
+
+
+def test_json_envelope_serve_path(capsys):
+    env = _envelope(capsys, ["--serve", "batched_decode", "--json"])
+    assert env["schema_version"] == 2
+    assert env["kind"] == "serve"
+    assert set(env) == {"schema_version", "kind", "timing", "report"}
+    assert env["report"]["ok"] and env["report"]["verdict"] == "certificate"
+    blob = json.dumps(env, indent=2, sort_keys=True)
+    assert json.dumps(json.loads(blob), indent=2, sort_keys=True) == blob
+
+
+def test_cli_list_serve_rows(capsys):
+    verify_main(["--list"])
+    out = capsys.readouterr().out
+    assert "[serve]" in out
+    assert "serve@tp_decode" in out and "serve@batched_decode" in out
+    assert "stale_cache_shard" in out and "cache_gather_wrong_axis" in out
