@@ -5,7 +5,7 @@ PYTEST ?= $(PY) -m pytest
 
 .PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden \
 	modelcheck-smoke gradcheck-smoke servecheck-smoke chaos-smoke \
-	cache-smoke
+	cache-smoke fn-smoke docs-check
 
 # tier-1 gate: full test suite
 verify:
@@ -81,3 +81,18 @@ chaos-smoke:
 # that entry re-proved
 cache-smoke:
 	PYTHONPATH=src $(PY) scripts/cache_smoke.py
+
+# generic-frontend smoke: the bring-your-own-function example must run end
+# to end (clean certificate, localized bug, source-located unsupported
+# primitive) and the same task must resolve through the --fn CLI path
+fn-smoke:
+	PYTHONPATH=src $(PY) examples/verify_your_own_fn.py
+	PYTHONPATH=src $(PY) -m repro.launch.verify \
+		--fn examples/verify_your_own_fn.py:make_task --json > /dev/null
+
+# docs gates: lemma catalog completeness, CLI --help drift, docstring
+# coverage over repro.core + repro.api (dependency-free AST checker)
+docs-check:
+	$(PY) scripts/check_cli_docs.py
+	$(PY) scripts/check_docstrings.py
+	PYTHONPATH=src $(PYTEST) -x -q tests/test_docs.py

@@ -1,0 +1,101 @@
+"""Verify YOUR OWN shard_map function — no registry, no hand-built terms.
+
+The generic jaxpr frontend (``repro.core.from_jaxpr`` +
+``repro.api.verify_functions``) traces any sequential/distributed function
+pair you wrote, so verification is one call:
+
+    PYTHONPATH=src python examples/verify_your_own_fn.py
+
+The same task also runs through the CLI:
+
+    PYTHONPATH=src python -m repro.launch.verify \
+        --fn examples/verify_your_own_fn.py:make_task --json
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DEGREE = 2          # tensor-parallel ranks
+SEQ, D_MODEL, D_FF = 4, 8, 8
+
+
+# -- 1. the model you trust: a plain sequential MLP -------------------------
+
+def seq_mlp(x, w1, w2):
+    """The sequential reference: y = tanh(x @ w1) @ w2."""
+    return jnp.tanh(x @ w1) @ w2
+
+
+# -- 2. the distributed implementation you wrote ----------------------------
+# Megatron-style tensor parallelism: w1 column-sharded, w2 row-sharded, so
+# each rank holds partial sums that a psum over the `tp` axis assembles.
+
+def dist_mlp(x, w1, w2):
+    """Per-rank TP implementation: partial matmuls + psum over `tp`."""
+    h = jnp.tanh(x @ w1)          # x replicated, w1 column shard
+    return jax.lax.psum(h @ w2, "tp")
+
+
+def dist_mlp_buggy(x, w1, w2):
+    """A classic mistake: 'averaging' the psum as if shards were replicas.
+
+    The per-rank products are *partial sums*, not copies — dividing by the
+    rank count halves the result.  (The same bug class as HF's
+    gradient-accumulation rescale regression.)
+    """
+    h = jnp.tanh(x @ w1)
+    return jax.lax.psum(h @ w2, "tp") / DEGREE      # BUG: not an average!
+
+
+def make_task():
+    """Task description for the CLI: ``--fn <this file>:make_task``."""
+    avals = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for s in ((SEQ, D_MODEL), (D_MODEL, D_FF), (D_FF, D_MODEL))]
+    return {
+        "fn_seq": seq_mlp,
+        "fn_dist": dist_mlp,
+        "mesh": {"tp": DEGREE},
+        "in_specs": (P(), P(None, "tp"), P("tp", None)),
+        "avals": avals,
+        "name": "my_tp_mlp",
+    }
+
+
+def main():
+    sys.path.insert(0, "src")
+    from repro.api import verify_functions
+
+    task = make_task()
+
+    # the correct implementation certifies: R_o maps each sequential output
+    # to a clean expression over per-rank outputs
+    report = verify_functions(**task)
+    assert report.verdict == "certificate", report
+    print("[1] your TP MLP verified — certificate:")
+    for k, v in report.r_o.items():
+        print(f"      {k} = {v}")
+
+    # the buggy variant is caught and localized — no test data needed
+    report = verify_functions(**{**task, "fn_dist": dist_mlp_buggy,
+                                 "name": "my_tp_mlp_buggy"})
+    assert report.verdict == "refinement_error", report
+    loc = report.localization
+    print(f"\n[2] buggy variant rejected — localized at G_s operator "
+          f"#{loc['op_index']} `{loc['op_name']}` (output `{loc['out_name']}`)")
+
+    # code outside the term vocabulary fails *loudly*, naming the primitive
+    # and your source line — not with a confusing downstream verdict
+    def dist_sorted(x, w1, w2):
+        return jnp.sort(jax.lax.psum(jnp.tanh(x @ w1) @ w2, "tp"), axis=0)
+
+    report = verify_functions(**{**task, "fn_dist": dist_sorted,
+                                 "name": "my_sorted_mlp"})
+    assert report.verdict == "error" and "sort" in report.error, report
+    print(f"\n[3] unsupported code is named at its source:\n"
+          f"      {report.error.splitlines()[0]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Keep docs/CLI.md's --help block in sync with the real CLI.
+
+Regenerates the ``verify --help`` text (with COLUMNS pinned so argparse
+wrapping is deterministic) and compares it against the marked block in
+docs/CLI.md.  CI runs this in check mode and fails on drift; after
+changing flags, run::
+
+    python scripts/check_cli_docs.py --update
+"""
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC = os.path.join(ROOT, "docs", "CLI.md")
+BEGIN, END = "<!-- BEGIN VERIFY-HELP -->", "<!-- END VERIFY-HELP -->"
+
+
+def real_help() -> str:
+    env = dict(os.environ, COLUMNS="80",
+               PYTHONPATH=os.path.join(ROOT, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.verify", "--help"],
+        capture_output=True, text=True, env=env, cwd=ROOT, check=True).stdout
+    # argparse names the prog after the script file; normalize it
+    return out.replace("usage: verify.py", "usage: repro.launch.verify")
+
+
+def render(help_text: str) -> str:
+    return f"{BEGIN}\n```text\n{help_text.rstrip()}\n```\n{END}"
+
+
+def main(argv) -> int:
+    update = "--update" in argv
+    with open(DOC, encoding="utf-8") as f:
+        doc = f.read()
+    pattern = re.compile(re.escape(BEGIN) + ".*?" + re.escape(END),
+                         flags=re.DOTALL)
+    if not pattern.search(doc):
+        print(f"error: {DOC} is missing the {BEGIN} / {END} markers")
+        return 2
+    fresh = pattern.sub(lambda _: render(real_help()), doc)
+    if fresh == doc:
+        print("docs/CLI.md --help block is in sync")
+        return 0
+    if update:
+        with open(DOC, "w", encoding="utf-8") as f:
+            f.write(fresh)
+        print("docs/CLI.md --help block regenerated")
+        return 0
+    print("error: docs/CLI.md --help block is stale — run "
+          "`python scripts/check_cli_docs.py --update`")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

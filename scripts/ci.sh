@@ -68,6 +68,18 @@ case "$target" in
   # persistent-cache gate: cold commits, warm hits byte-identically, torn
   # journal lines recovered with only the damaged entry re-proved
   cache-smoke) PYTHONPATH=src python scripts/cache_smoke.py ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|servecheck-smoke|chaos-smoke|cache-smoke)" >&2
+  # generic-frontend smoke: the bring-your-own-function example runs end to
+  # end (clean certificate, localized bug, source-located unsupported
+  # primitive) and the same task resolves through the --fn CLI path
+  fn-smoke)    PYTHONPATH=src python examples/verify_your_own_fn.py
+               PYTHONPATH=src python -m repro.launch.verify \
+                 --fn examples/verify_your_own_fn.py:make_task --json \
+                 > /dev/null ;;
+  # docs gates: lemma catalog completeness, CLI --help drift, docstring
+  # coverage over repro.core + repro.api (no external linters needed)
+  docs-check)  python scripts/check_cli_docs.py
+               python scripts/check_docstrings.py
+               PYTHONPATH=src python -m pytest -x -q tests/test_docs.py ;;
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|servecheck-smoke|chaos-smoke|cache-smoke|fn-smoke|docs-check)" >&2
      exit 2 ;;
 esac

@@ -21,6 +21,7 @@ from .registry import (DuplicateStrategyError, RegisteredStrategy, bug_host,
                        list_train_tasks, register_strategy)
 from .report import Report, VERDICTS
 from .runner import run_spec, verify
+from .functions import function_spec, run_functions, verify_functions
 from .suite import Suite, SuiteResult, SuiteTask
 
 from ..dist import strategies as _strategies  # noqa: F401 — populate registry
@@ -32,6 +33,7 @@ __all__ = [
     "check_model_task", "check_serve_task", "check_train_task",
     "get_strategy", "list_bugs", "list_model_tasks", "list_serve_tasks",
     "list_strategies", "list_train_tasks", "register_strategy",
-    "Report", "VERDICTS", "run_spec", "verify", "Suite", "SuiteResult",
+    "Report", "VERDICTS", "run_spec", "verify", "function_spec",
+    "run_functions", "verify_functions", "Suite", "SuiteResult",
     "SuiteTask",
 ]

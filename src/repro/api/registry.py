@@ -73,7 +73,7 @@ _REGISTRY: Dict[str, RegisteredStrategy] = {}
 
 
 class DuplicateStrategyError(ValueError):
-    pass
+    """A strategy (or one of its bug names) is already registered."""
 
 
 def register_strategy(name: str, *, bugs=(),
@@ -153,6 +153,7 @@ def _ensure_populated() -> None:
 
 
 def get_strategy(name: str) -> RegisteredStrategy:
+    """Look up a registered strategy; KeyError names the known set."""
     _ensure_populated()
     try:
         return _REGISTRY[name]
@@ -162,6 +163,7 @@ def get_strategy(name: str) -> RegisteredStrategy:
 
 
 def list_strategies() -> Tuple[str, ...]:
+    """Registered case names, in registration order."""
     _ensure_populated()
     return tuple(_REGISTRY)
 
@@ -177,6 +179,7 @@ def list_bugs() -> Dict[str, Tuple[str, BugSpec]]:
 
 
 def bug_host(bug: str) -> str:
+    """The case name hosting ``bug``; KeyError names the known bugs."""
     try:
         return list_bugs()[bug][0]
     except KeyError:

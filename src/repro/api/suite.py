@@ -70,6 +70,7 @@ from .spec import task_id as spec_task_id
 
 @dataclass(frozen=True)
 class SuiteTask:
+    """One cell of the suite matrix: (case, degree, optional bug)."""
     case: str
     degree: Degree                       # int, or one entry per mesh axis
     bug: Optional[str] = None
@@ -370,6 +371,7 @@ def cache_from_args(args):
 
 
 def main(argv=None) -> int:
+    """CLI for ``python -m repro.api``: run the suite matrix in parallel."""
     ap = argparse.ArgumentParser(
         prog="python -m repro.api",
         description="Run the verification suite matrix in parallel.")

@@ -2,12 +2,17 @@
 
 Public API:
     capture, capture_spmd, expand_spmd   — graph capture (jaxpr -> Graph)
+    capture_function, capture_spmd_function, UnsupportedPrimitive
+                                         — generic strict capture frontend
     check_refinement, GraphGuard         — iterative relation inference
     Certificate, RefinementError         — results
     register_lemma                       — user lemma extension point
 """
 from .capture import (Graph, CaptureError, capture, capture_chain,
                       capture_spmd, expand_spmd, derive_input_relation)
+from .from_jaxpr import (SUPPORTED_PRIMITIVES, UnsupportedPrimitive,
+                         capture_function, capture_spmd_function,
+                         normalize_mesh, strict_capture)
 from .egraph import EGraph, Lemma, EGraphLimit, EGraphShapeError
 from .infer import Certificate, GraphGuard, RefinementError, check_refinement
 from .lemmas import all_lemmas, register_lemma
@@ -17,7 +22,9 @@ from . import terms
 
 __all__ = [
     "Graph", "CaptureError", "capture", "capture_chain", "capture_spmd",
-    "expand_spmd",
+    "expand_spmd", "SUPPORTED_PRIMITIVES", "UnsupportedPrimitive",
+    "capture_function", "capture_spmd_function", "normalize_mesh",
+    "strict_capture",
     "derive_input_relation", "EGraph", "Lemma", "EGraphLimit",
     "EGraphShapeError", "Certificate", "GraphGuard", "RefinementError",
     "check_refinement", "all_lemmas", "register_lemma", "AffExpr",

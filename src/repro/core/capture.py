@@ -112,6 +112,20 @@ def _dt(dtype) -> str:
 # Capture driver
 # ---------------------------------------------------------------------------
 
+# Strict-mode hook stack (installed by ``from_jaxpr.strict_capture``): each
+# entry is called as ``hook(eqn, reason)`` right before a lenient fallback —
+# an unknown primitive becoming an opaque term, or an over-budget scan
+# raising a bare CaptureError — so the generic frontend can raise a
+# structured ``UnsupportedPrimitive`` naming the eqn and its source location.
+_EQN_HOOKS: list = []
+
+
+def _on_unsupported(eqn, reason: str) -> None:
+    """Notify strict-mode hooks that ``eqn`` has no clean term lowering."""
+    for hook in reversed(_EQN_HOOKS):
+        hook(eqn, reason)
+
+
 class _Namer:
     def __init__(self):
         self.n = 0
@@ -171,6 +185,9 @@ def capture_chain(stages, init_avals, init_names):
 
 @dataclass
 class SpmdCapture:
+    """A traced per-rank SPMD program before rank expansion: the single-rank
+    graph (collectives still symbolic) plus the mesh and input specs
+    ``expand_spmd`` needs to instantiate it per rank and derive R_i."""
     graph: Graph                  # per-rank program with collective ops
     mesh_axes: dict               # axis name -> size
     in_specs: list                # PartitionSpec per input
@@ -179,6 +196,9 @@ class SpmdCapture:
 
 def capture_spmd(fn: Callable, mesh_axes: dict, in_specs: Sequence,
                  avals: Sequence, names: Sequence[str]) -> SpmdCapture:
+    """Trace a per-rank SPMD ``fn`` under ``shard_map`` on an abstract mesh
+    and lower the unwrapped body to a single-rank :class:`Graph` (collectives
+    kept as symbolic ops for ``expand_spmd`` to instantiate)."""
     axis_names = tuple(mesh_axes)
     mesh = _make_abstract_mesh(mesh_axes)
     sm = _wrap_shard_map(fn, mesh, tuple(in_specs))
@@ -335,9 +355,16 @@ def _process_eqns(eqns, read, emit, g, namer, declare):
             _inline_scan(eqn, read, emit, g, namer, declare)
             continue
         # -- regular primitive --------------------------------------------
-        outs = _normalize(eqn, read)
+        try:
+            outs = _normalize(eqn, read)
+        except CaptureError as e:
+            # a partially-supported primitive (e.g. interior padding) — let
+            # strict mode attach the eqn + source location before the raise
+            _on_unsupported(eqn, str(e))
+            raise
         if outs is None:
             # uninterpreted: keep as opaque op (user lemma extension point)
+            _on_unsupported(eqn, "no normalization to the term vocabulary")
             args = tuple(read(a) for a in eqn.invars)
             for k, ov in enumerate(eqn.outvars):
                 tag = f"#{k}" if len(eqn.outvars) > 1 else ""
@@ -353,6 +380,8 @@ def _inline_scan(eqn, read, emit, g, namer, declare):
     p = eqn.params
     length, nc, ncar = p["length"], p["num_consts"], p["num_carry"]
     if length > 8:
+        _on_unsupported(eqn, f"scan of length {length} exceeds the unroll "
+                             f"budget of 8")
         raise CaptureError(
             f"scan of length {length} in a verification graph — unroll "
             f"explicitly or verify a single layer (paper §6.3 verifies one "
@@ -411,7 +440,8 @@ def _inline_scan(eqn, read, emit, g, namer, declare):
 
 
 class CaptureError(RuntimeError):
-    pass
+    """A jaxpr could not be lowered to the term language (e.g. an
+    over-budget scan or an unsupported primitive configuration)."""
 
 
 # ---------------------------------------------------------------------------
@@ -723,6 +753,7 @@ def _norm_collective(eqn, read) -> list:
 # ---------------------------------------------------------------------------
 
 def rank_tag(axis_names, coords) -> str:
+    """Name suffix identifying one rank, e.g. ``@dp0,tp1``."""
     return "@" + ",".join(f"{a}{c}" for a, c in zip(axis_names, coords))
 
 

@@ -43,6 +43,8 @@ from .terms import Term, CLEAN_OPS, tensor as mk_tensor
 
 
 class ENode:
+    """One operator node in the e-graph: op name, hashable attrs, and
+    child e-class ids.  Hash-consed — equal nodes share one entry."""
     __slots__ = ("op", "attrs", "children", "_hash")
 
     def __init__(self, op: str, attrs: tuple, children: tuple):
@@ -69,6 +71,9 @@ class ENode:
 
 
 class EClassInfo:
+    """Per-e-class bookkeeping: member nodes, parent back-edges, the class
+    shape/dtype invariant, known tensor leaves, and the GraphGuard T_rel
+    frontier marker."""
     __slots__ = ("nodes", "parents", "shape", "dtype", "tensors", "related")
 
     def __init__(self, shape, dtype):
@@ -83,6 +88,10 @@ class EClassInfo:
 
 
 class EGraph:
+    """Congruence-closed e-graph over the term language: union-find +
+    hashcons + per-class info, with op-indexed lemma dispatch, deferred
+    rebuilds, and a node budget (``EGraphLimit`` past ``max_nodes``)."""
+
     def __init__(self, max_nodes: int = 200_000):
         self.uf: list[int] = []
         self.classes: dict[int, EClassInfo] = {}
@@ -572,11 +581,12 @@ class EGraph:
 
 
 class EGraphShapeError(AssertionError):
-    pass
+    """Two terms merged into one e-class disagree on shape/dtype — a lemma
+    or capture bug, never a user error."""
 
 
 class EGraphLimit(RuntimeError):
-    pass
+    """The e-graph grew past its ``max_nodes`` budget during saturation."""
 
 
 class Lemma:

@@ -1,0 +1,207 @@
+"""Generic jaxpr capture frontend: trace *arbitrary* user functions.
+
+The rest of the repo reaches the term language through registered builders
+(``repro.dist.strategies`` et al.); this module is the "bring your own
+``shard_map`` function" entry the ROADMAP promises.  It traces any jitted /
+``shard_map``-style function via ``jax.make_jaxpr``, walks ``jaxpr.eqns``
+mapping invars/outvars through a var table (the graphax ``from_jaxpr``
+traversal idiom), and lowers each primitive into the term vocabulary of
+``terms.py`` — reusing the exact normalization machinery in ``capture.py``
+so a function captured here yields a **byte-identical certificate** to the
+hand-registered frontend (asserted case-by-case in
+``tests/test_from_jaxpr.py``).
+
+The difference from the internal path is the error contract.  The internal
+path is *lenient*: a primitive outside the vocabulary becomes an
+uninterpreted ``opaque`` term (a user-lemma extension point), and an
+over-budget ``scan`` raises a bare ``CaptureError``.  For user-written code
+that silence is a trap — an opaque op can never join a relation, so the
+verdict degrades to a confusing refinement failure far from the cause.
+This frontend is therefore *strict* by default: anything without a clean
+lowering raises :class:`UnsupportedPrimitive` naming the offending
+primitive and its **source location** (file:line of the user's code, from
+the eqn's ``source_info``), e.g.::
+
+    UnsupportedPrimitive: primitive `scan` at my_model.py:42 (ssm_step) has
+    no term-language lowering: scan of length 16 exceeds the unroll budget
+    of 8 — pass strict=False to capture it as an uninterpreted opaque op
+
+Pass ``strict=False`` to restore the lenient behaviour (and pair it with
+``repro.core.register_lemma`` to teach the engine about the opaque op).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Iterator, Optional, Sequence
+
+import jax
+
+from .capture import (COLLECTIVES, CaptureError, Graph, SpmdCapture,
+                      _EQN_HOOKS, _EW1_MAP, _EW2_MAP)
+from .capture import capture as _capture
+from .capture import capture_spmd as _capture_spmd
+
+try:  # jax keeps source-info pretty-printing in a private util module
+    from jax._src.source_info_util import summarize as _summarize
+except Exception:  # pragma: no cover - very old/new jax
+    _summarize = None
+
+
+# Structural primitives inlined (not lowered) during the eqn walk, plus the
+# bounded-unroll scan — mirrored from ``capture._process_eqns``.
+STRUCTURAL_PRIMITIVES = frozenset({
+    "pjit", "jit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+    "custom_vjp_call_jaxpr", "remat", "checkpoint", "custom_jvp_call_jaxpr",
+    "core_call", "scan",
+})
+
+# Primitives with an unconditional clean lowering in ``capture._normalize``
+# (conditionally-supported ones — strided ``slice``, exotic ``gather``
+# patterns, interior ``pad`` — raise UnsupportedPrimitive in strict mode
+# when their conditions fail, so this set is the *guaranteed* vocabulary).
+SUPPORTED_PRIMITIVES = frozenset(
+    {"device_put", "integer_pow", "square", "select_n", "clamp",
+     "convert_element_type", "broadcast_in_dim", "reshape", "squeeze",
+     "expand_dims", "transpose", "rev", "concatenate", "slice", "split",
+     "iota", "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+     "reduce_and", "reduce_or", "argmax", "cumsum", "dot_general",
+     "dynamic_slice", "dynamic_update_slice", "pad", "gather",
+     "scatter_add"}
+    | set(_EW1_MAP) | set(_EW2_MAP) | set(COLLECTIVES))
+
+
+def source_location(eqn) -> str:
+    """Best-effort ``file:line (function)`` of an eqn's user source."""
+    si = getattr(eqn, "source_info", None)
+    if si is None:
+        return "<unknown>"
+    if _summarize is not None:
+        try:
+            return _summarize(si)
+        except Exception:  # pragma: no cover - defensive
+            pass
+    tb = getattr(si, "traceback", None)  # pragma: no cover - fallback path
+    if tb is not None:
+        frames = tb.frames if hasattr(tb, "frames") else []
+        for f in reversed(list(frames)):
+            return f"{f.file_name}:{f.line_num} ({f.function_name})"
+    return "<unknown>"  # pragma: no cover
+
+
+class UnsupportedPrimitive(CaptureError):
+    """A traced eqn has no clean lowering into the term language.
+
+    Raised by the strict capture frontend instead of silently emitting an
+    uninterpreted opaque term.  Carries the offending ``primitive`` name,
+    its ``source`` location (``file:line (function)`` of the user code that
+    emitted the eqn), and the ``reason`` the lowering was refused.
+    """
+
+    def __init__(self, primitive: str, source: str, reason: str = ""):
+        self.primitive = str(primitive)
+        self.source = str(source)
+        self.reason = str(reason)
+        msg = (f"primitive `{self.primitive}` at {self.source} has no "
+               f"term-language lowering")
+        if reason:
+            msg += f": {reason}"
+        msg += (" — pass strict=False to capture it as an uninterpreted "
+                "opaque op (see repro.core.register_lemma)")
+        super().__init__(msg)
+
+
+@contextlib.contextmanager
+def strict_capture() -> Iterator[None]:
+    """Make every lenient capture fallback raise ``UnsupportedPrimitive``.
+
+    Installs a hook on ``capture._process_eqns`` for the dynamic extent of
+    the block: unknown primitives (which would become opaque terms),
+    partially-supported primitives whose side conditions fail, and
+    over-budget scans all raise with the eqn's primitive name and source
+    location attached.
+    """
+    def hook(eqn, reason):
+        raise UnsupportedPrimitive(eqn.primitive.name, source_location(eqn),
+                                   reason)
+    _EQN_HOOKS.append(hook)
+    try:
+        yield
+    finally:
+        _EQN_HOOKS.remove(hook)
+
+
+def default_input_names(fn: Callable, n: int) -> list:
+    """Input names for ``fn``: its positional parameter names when the
+    signature is introspectable (and fully positional), else ``arg0..``."""
+    try:
+        import inspect
+        params = list(inspect.signature(fn).parameters.values())
+        names = [p.name for p in params
+                 if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+        if len(names) == n:
+            return names
+    except (TypeError, ValueError):
+        pass
+    return [f"arg{i}" for i in range(n)]
+
+
+def normalize_mesh(mesh) -> dict:
+    """Coerce a mesh argument to the ``{axis name: size}`` dict form.
+
+    Accepts a plain dict, a ``jax.sharding.Mesh`` / ``AbstractMesh`` (their
+    ``.shape`` mapping), or any mapping-like object.
+    """
+    if isinstance(mesh, dict):
+        out = {str(k): int(v) for k, v in mesh.items()}
+    elif hasattr(mesh, "shape") and hasattr(mesh.shape, "items"):
+        out = {str(k): int(v) for k, v in mesh.shape.items()}
+    else:
+        try:
+            out = {str(k): int(v) for k, v in dict(mesh).items()}
+        except (TypeError, ValueError):
+            raise TypeError(
+                f"mesh must be a {{axis: size}} dict or a jax Mesh, got "
+                f"{type(mesh).__name__}") from None
+    if not out or any(v < 1 for v in out.values()):
+        raise ValueError(f"mesh axes must have positive sizes, got {out}")
+    return out
+
+
+def capture_function(fn: Callable, avals: Sequence,
+                     names: Optional[Sequence[str]] = None, *,
+                     strict: bool = True) -> Graph:
+    """Trace ``fn`` via ``jax.make_jaxpr`` and lower it to a :class:`Graph`.
+
+    The generic flavour of ``capture()``: ``names`` defaults to the
+    function's own parameter names, and ``strict=True`` (the default)
+    raises :class:`UnsupportedPrimitive` for any eqn outside the term
+    vocabulary instead of emitting an opaque term.
+    """
+    if names is None:
+        names = default_input_names(fn, len(avals))
+    if strict:
+        with strict_capture():
+            return _capture(fn, list(avals), list(names))
+    return _capture(fn, list(avals), list(names))
+
+
+def capture_spmd_function(fn: Callable, mesh, in_specs: Sequence,
+                          avals: Sequence,
+                          names: Optional[Sequence[str]] = None, *,
+                          strict: bool = True) -> SpmdCapture:
+    """Trace a per-rank SPMD ``fn`` under ``shard_map`` (strict by default).
+
+    The generic flavour of ``capture_spmd()``: ``mesh`` may be a
+    ``{axis: size}`` dict or a jax ``Mesh``; ``names`` defaults to the
+    function's parameter names.  The returned :class:`SpmdCapture` expands
+    to a multi-rank graph + input relation via ``expand_spmd``.
+    """
+    mesh_axes = normalize_mesh(mesh)
+    if names is None:
+        names = default_input_names(fn, len(avals))
+    if strict:
+        with strict_capture():
+            return _capture_spmd(fn, mesh_axes, list(in_specs),
+                                 list(avals), list(names))
+    return _capture_spmd(fn, mesh_axes, list(in_specs), list(avals),
+                         list(names))

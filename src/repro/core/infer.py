@@ -46,6 +46,7 @@ from .terms import Term, eval_term, pretty
 
 
 def is_dist_name(name: str) -> bool:
+    """True for per-rank tensor names (carrying a ``@rank`` tag)."""
     return "@" in name
 
 
@@ -331,4 +332,7 @@ class GraphGuard:
 
 def check_refinement(gs: Graph, gd: Graph, r_i: dict,
                      max_nodes: int = 400_000) -> Certificate:
+    """One-shot refinement check: does ``gd`` (multi-rank) refine ``gs``
+    given input relation ``r_i``?  Returns a :class:`Certificate` or raises
+    :class:`RefinementError` with the first unresolvable operator."""
     return GraphGuard(gs, gd, r_i, max_nodes=max_nodes).run()

@@ -51,6 +51,7 @@ def concat_reps(eg: EGraph, cid: int):
 
 
 def slice_reps(eg: EGraph, cid: int):
+    """All slice representations of a class: [(base cid, starts, limits)]."""
     out = []
     for n in eg.nodes_of(cid, "slice"):
         a = dict(n.attrs)
@@ -59,6 +60,7 @@ def slice_reps(eg: EGraph, cid: int):
 
 
 def broadcast_reps(eg: EGraph, cid: int):
+    """All broadcast representations of a class: [(src, shape, bdims)]."""
     out = []
     for n in eg.nodes_of(cid, "broadcast"):
         a = dict(n.attrs)
@@ -1282,4 +1284,5 @@ def register_lemma(name: str, ops, fn, source: str = "user") -> Lemma:
 
 
 def all_lemmas() -> list[Lemma]:
+    """The active rule set: built-in LEMMAS plus registered user lemmas."""
     return LEMMAS + _USER_LEMMAS

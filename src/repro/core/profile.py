@@ -36,6 +36,9 @@ from dataclasses import dataclass, fields
 
 @dataclass
 class OptConfig:
+    """Engine optimization toggles (all on by default; certificates are
+    byte-identical across settings).  Set via ``GRAPHGUARD_OPT`` or
+    ``set_optimizations``."""
     indexed_dispatch: bool = True
     deferred_rebuild: bool = True
     incremental_extract: bool = True

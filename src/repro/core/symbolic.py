@@ -97,7 +97,8 @@ class AffExpr:
 
 
 class NonAffine(Exception):
-    pass
+    """An index expression fell outside the affine fragment the scalar
+    solver can decide."""
 
 
 class ScalarSolver:

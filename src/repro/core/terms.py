@@ -175,6 +175,7 @@ class Term:
 
 
 def pretty(t: Term, max_depth: int = 99) -> str:
+    """Render a Term as a readable expression, bounded by depth."""
     if t.op == "tensor":
         return t.name
     if t.op == "lit":
@@ -194,10 +195,12 @@ def pretty(t: Term, max_depth: int = 99) -> str:
 # ---------------------------------------------------------------------------
 
 def tensor(name: str, shape: tuple, dtype: str = "f") -> Term:
+    """Named tensor leaf."""
     return Term("tensor", (), (("name", name),), tuple(shape), dtype)
 
 
 def lit(value) -> Term:
+    """Scalar literal leaf (numpy scalars/bools normalized)."""
     if isinstance(value, (np.floating,)):
         value = float(value)
     if isinstance(value, (np.integer,)):
@@ -209,15 +212,18 @@ def lit(value) -> Term:
 
 
 def ew1(op: str, x: Term) -> Term:
+    """Unary elementwise op (shape/dtype preserved)."""
     assert op in EW1_OPS, op
     return Term(op, (x,), (), x.shape, x.dtype)
 
 
 def integer_pow(x: Term, p: int) -> Term:
+    """x ** p for integer literal p."""
     return Term("integer_pow", (x,), (("p", p),), x.shape, x.dtype)
 
 
 def ew2(op: str, x: Term, y: Term) -> Term:
+    """Binary elementwise op; scalars lift, comparisons yield bools."""
     assert op in EW2_OPS, op
     assert x.shape == y.shape or x.shape == () or y.shape == (), \
         f"ew2 {op} shape mismatch {x.shape} vs {y.shape}"
@@ -228,6 +234,7 @@ def ew2(op: str, x: Term, y: Term) -> Term:
 
 
 def add(x: Term, y: Term) -> Term:
+    """Binary add (see ``add_n`` for the engine normal form)."""
     return ew2("add", x, y)
 
 
@@ -278,6 +285,7 @@ def bmm(a: Term, b: Term) -> Term:
 
 
 def concat(xs: Iterable[Term], dim: int) -> Term:
+    """Concatenate along ``dim`` (singleton lists collapse)."""
     xs = tuple(xs)
     assert xs
     if len(xs) == 1:
@@ -293,6 +301,7 @@ def concat(xs: Iterable[Term], dim: int) -> Term:
 
 
 def slice_(x: Term, starts: tuple, limits: tuple) -> Term:
+    """Contiguous slice [starts, limits); full slices collapse."""
     starts, limits = tuple(starts), tuple(limits)
     assert len(starts) == len(x.shape) == len(limits)
     for s, l, d in zip(starts, limits, x.shape):
@@ -305,6 +314,7 @@ def slice_(x: Term, starts: tuple, limits: tuple) -> Term:
 
 
 def transpose(x: Term, perm: tuple) -> Term:
+    """Axis permutation; identity permutations collapse."""
     perm = tuple(perm)
     assert sorted(perm) == list(range(len(x.shape)))
     if perm == tuple(range(len(x.shape))):
@@ -314,6 +324,7 @@ def transpose(x: Term, perm: tuple) -> Term:
 
 
 def reshape(x: Term, shape: tuple) -> Term:
+    """Reshape to ``shape`` (same element count); no-ops collapse."""
     shape = tuple(shape)
     assert int(np.prod(shape, dtype=np.int64)) == int(np.prod(x.shape, dtype=np.int64)), \
         f"reshape {x.shape} -> {shape}"
@@ -333,14 +344,17 @@ def broadcast(x: Term, shape: tuple, bdims: tuple) -> Term:
 
 
 def convert(x: Term, dtype: str = "f") -> Term:
+    """Dtype cast."""
     return Term("convert", (x,), (("to", dtype),), x.shape, dtype)
 
 
 def rev(x: Term, dims: tuple) -> Term:
+    """Reverse along ``dims``."""
     return Term("rev", (x,), (("dims", tuple(dims)),), x.shape, x.dtype)
 
 
 def reduce_(op: str, x: Term, axes: tuple) -> Term:
+    """Reduction over ``axes`` (sum/max/min/prod/and/or)."""
     axes = tuple(sorted(axes))
     assert op in REDUCE_OPS
     shape = tuple(d for i, d in enumerate(x.shape) if i not in axes)
@@ -348,6 +362,7 @@ def reduce_(op: str, x: Term, axes: tuple) -> Term:
 
 
 def reduce_sum(x: Term, axes: tuple) -> Term:
+    """Sum reduction over ``axes``."""
     return reduce_("reduce_sum", x, axes)
 
 
@@ -359,25 +374,30 @@ def gather_rows(table: Term, idx: Term) -> Term:
 
 
 def select(pred: Term, on_true: Term, on_false: Term) -> Term:
+    """Elementwise predicate select."""
     assert on_true.shape == on_false.shape
     return Term("select", (pred, on_true, on_false), (), on_true.shape,
                 on_true.dtype)
 
 
 def iota(shape: tuple, dim: int, dtype: str = "i") -> Term:
+    """Index ramp along ``dim``."""
     return Term("iota", (), (("shape", tuple(shape)), ("dim", dim)),
                 tuple(shape), dtype)
 
 
 def dus(x: Term, upd: Term, starts: tuple) -> Term:
+    """dynamic_update_slice: write ``upd`` into ``x`` at ``starts``."""
     return Term("dus", (x, upd), (("starts", tuple(starts)),), x.shape, x.dtype)
 
 
 def cumsum(x: Term, axis: int) -> Term:
+    """Cumulative sum along ``axis``."""
     return Term("cumsum", (x,), (("axis", axis),), x.shape, x.dtype)
 
 
 def argmax(x: Term, axis: int) -> Term:
+    """Integer argmax along ``axis`` (axis removed)."""
     shape = tuple(d for i, d in enumerate(x.shape) if i != axis)
     return Term("argmax", (x,), (("axis", axis),), shape, "i")
 

@@ -25,6 +25,15 @@ prefill read proving the chain composes):
     python -m repro.launch.verify --serve tp_decode \
         [--inject-bug stale_cache_shard] [--degree 2] [--workers 2] [--json]
 
+Bring-your-own-function verification (the generic jaxpr frontend,
+``repro.core.from_jaxpr`` + ``repro.api.verify_functions``): point
+``--fn`` at a ``module:callable`` whose callable returns the task —
+a dict with ``fn_seq``/``fn_dist``/``mesh``/``in_specs``/``avals``
+(or ``example_args``), a ``StrategySpec``, or the legacy 6-tuple:
+
+    python -m repro.launch.verify \
+        --fn examples/verify_your_own_fn.py:make_task [--json]
+
 The case matrix lives in the ``repro.api`` registry (populated by
 ``repro.dist.strategies``); model-level tasks resolve through
 ``repro.modelcheck``, train-step tasks through ``repro.gradcheck`` and
@@ -243,6 +252,102 @@ def _run_serve(args, cache) -> int:
     return 0 if report.ok else 1
 
 
+def _load_fn_task(target: str):
+    """Resolve a ``--fn module:callable`` target and call it.
+
+    The module part is either an importable dotted name or a path to a
+    ``.py`` file; the callable takes no arguments and returns the task
+    description (dict / ``StrategySpec`` / legacy 6-tuple).
+    """
+    mod_part, sep, attr = target.partition(":")
+    if not sep or not mod_part or not attr:
+        raise ValueError(f"--fn takes MODULE:CALLABLE, got `{target}`")
+    if mod_part.endswith(".py") or "/" in mod_part:
+        import importlib.util
+        spec = importlib.util.spec_from_file_location("_verify_fn_target",
+                                                      mod_part)
+        if spec is None or spec.loader is None:
+            raise ValueError(f"cannot load module file `{mod_part}`")
+        module = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(module)
+    else:
+        import importlib
+        module = importlib.import_module(mod_part)
+    fn = getattr(module, attr, None)
+    if fn is None or not callable(fn):
+        raise ValueError(f"`{mod_part}` has no callable `{attr}`")
+    return fn()
+
+
+def _fn_task_kwargs(task) -> dict:
+    """Normalize a ``--fn`` task into ``verify_functions`` keywords."""
+    from ..api import StrategySpec
+    if isinstance(task, StrategySpec):
+        return dict(fn_seq=task.seq_fn, fn_dist=task.dist_fn,
+                    mesh=task.mesh_axes, in_specs=task.in_specs,
+                    avals=task.avals, input_names=task.input_names,
+                    name=task.name or None)
+    if isinstance(task, dict):
+        d = dict(task)
+        for old, new in (("seq_fn", "fn_seq"), ("dist_fn", "fn_dist"),
+                         ("mesh_axes", "mesh"), ("names", "input_names")):
+            if old in d and new not in d:
+                d[new] = d.pop(old)
+        allowed = {"fn_seq", "fn_dist", "mesh", "in_specs", "avals",
+                   "input_names", "example_args", "name", "strict"}
+        unknown = sorted(set(d) - allowed)
+        if unknown:
+            raise ValueError(f"unknown task keys {unknown} "
+                             f"(allowed: {sorted(allowed)})")
+        missing = sorted({"fn_seq", "fn_dist", "mesh", "in_specs"} - set(d))
+        if missing:
+            raise ValueError(f"task is missing required keys {missing}")
+        return d
+    if isinstance(task, (tuple, list)) and len(task) == 6:
+        fn_seq, fn_dist, mesh, in_specs, avals, names = task
+        return dict(fn_seq=fn_seq, fn_dist=fn_dist, mesh=mesh,
+                    in_specs=in_specs, avals=avals, input_names=names)
+    raise ValueError(
+        f"--fn callable must return a dict, StrategySpec, or 6-tuple, got "
+        f"{type(task).__name__}")
+
+
+def _run_fn(args) -> int:
+    """Run the ``--fn`` path: generic jaxpr capture -> standard Report.
+
+    Exit codes follow the case path: 0 clean certificate, 1 refinement
+    failure (the implementation does not refine the sequential function),
+    2 a harness problem (bad --fn target, or capture/engine error —
+    including ``UnsupportedPrimitive`` for code the term language cannot
+    model).
+    """
+    from ..api import verify_functions
+    try:
+        task = _load_fn_task(args.fn)
+        kw = _fn_task_kwargs(task)
+    except (ValueError, TypeError, KeyError, ImportError, OSError,
+            AttributeError) as e:
+        print(f"[fn] {e}", file=sys.stderr)
+        return 2
+    engine_opts = {"max_nodes": 400_000}
+    report = verify_functions(engine_opts=engine_opts, **kw)
+    if args.json:
+        print(_json_envelope("fn", report.to_json(), _case_timing(report)))
+    elif report.verdict == "certificate":
+        for k, v in (report.r_o or {}).items():
+            print(f"  {k} = {v}")
+        print(f"REFINEMENT HOLDS — `{report.case}` refines its sequential "
+              f"spec (certificate above)")
+    elif report.verdict == "refinement_error":
+        print(f"REFINEMENT FAILED — `{report.case}` bug localized:")
+        print(json.dumps(report.localization, indent=2, sort_keys=True))
+    else:
+        print(f"VERDICT: {report.verdict} — {report.error}")
+    if report.verdict == "certificate":
+        return 0
+    return 1 if report.verdict == "refinement_error" else 2
+
+
 def _case_report(args, cache) -> dict:
     """Run the single case through the shared runtime so ``--timeout`` and
     ``--cache`` behave exactly as they do for suite/model/train runs."""
@@ -309,6 +414,12 @@ def main(argv=None):
                     choices=list_serve_strategies(),
                     help="serving-path verification: a serve strategy "
                          "like `tp_decode` (see --list)")
+    ap.add_argument("--fn", default=None, metavar="MODULE:CALLABLE",
+                    help="verify an arbitrary user function pair via the "
+                         "generic jaxpr frontend: CALLABLE() returns the "
+                         "task (a dict with fn_seq/fn_dist/mesh/in_specs/"
+                         "avals or example_args, a StrategySpec, or the "
+                         "legacy 6-tuple) — see docs/CLI.md")
     ap.add_argument("--inject-bug", default=None,
                     choices=tuple(model_bugs) + tuple(train_bugs)
                     + tuple(serve_bugs),
@@ -344,8 +455,17 @@ def main(argv=None):
     from ..api.suite import cache_from_args
     from ..runtime import resolve_cache
     cache = resolve_cache(cache_from_args(args))
-    if sum(x is not None for x in (args.model, args.train, args.serve)) > 1:
-        ap.error("--model, --train and --serve are separate paths")
+    if sum(x is not None
+           for x in (args.model, args.train, args.serve, args.fn)) > 1:
+        ap.error("--model, --train, --serve and --fn are separate paths")
+    if args.fn is not None:
+        if args.case is not None or args.bug is not None \
+                or args.inject_bug is not None or args.bug_layer is not None:
+            ap.error("--fn and --case/--bug/--inject-bug are separate paths")
+        rc = _run_fn(args)
+        if rc:
+            sys.exit(rc)
+        return
     if args.model is not None:
         if args.case is not None or args.bug is not None:
             ap.error("--model/--plan and --case/--bug are separate paths")

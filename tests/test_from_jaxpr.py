@@ -1,0 +1,237 @@
+"""Generic jaxpr frontend: cross-checks against the registered frontend
+(byte-identical certificates), strict-mode UnsupportedPrimitive contracts,
+verify_functions verdicts, and the `--fn` CLI path."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.api import (build_spec, function_spec, run_functions, run_spec,
+                       verify_functions)
+from repro.core import (SUPPORTED_PRIMITIVES, UnsupportedPrimitive,
+                        capture_function, capture_spmd_function,
+                        normalize_mesh)
+from repro.core.from_jaxpr import default_input_names, source_location
+from repro.launch.verify import main as verify_main
+
+# ---------------------------------------------------------------------------
+# cross-check: capturing the registry's real jax functions through the
+# generic frontend yields byte-identical certificates to run_spec
+# ---------------------------------------------------------------------------
+
+CROSS_CHECK_CASES = ["tp_layer", "sp_rope", "ep_moe", "aux_loss",
+                     "grad_accum", "ln_grad", "fsdp_mlp", "tp_dp_2d"]
+
+
+@pytest.mark.parametrize("case", CROSS_CHECK_CASES)
+def test_byte_identical_certificates(case):
+    spec = build_spec(case)
+    golden = run_spec(spec).to_json()
+    cert = run_functions(spec.seq_fn, spec.dist_fn, spec.mesh_axes,
+                         spec.in_specs, spec.avals,
+                         spec.input_names).to_json()
+    assert json.dumps(cert["r_o"], sort_keys=True) == \
+        json.dumps(golden["r_o"], sort_keys=True)
+    # same engine work, not just the same final relation
+    for key in ("egraph_nodes", "gs_ops", "gd_ops"):
+        assert cert["stats"][key] == golden["stats"][key]
+
+
+def test_cross_check_covers_at_least_six_cases():
+    assert len(CROSS_CHECK_CASES) >= 6
+
+
+# ---------------------------------------------------------------------------
+# strict-mode contract: UnsupportedPrimitive names the eqn and its source
+# ---------------------------------------------------------------------------
+
+def _ssm(x, a):
+    def step(h, xt):
+        h = a * h + xt          # ssm-style recurrence -> lax.scan
+        return h, h
+    _, ys = jax.lax.scan(step, jnp.zeros_like(x[0]), x)
+    return ys
+
+
+def test_over_budget_scan_names_primitive_and_source():
+    avals = [jax.ShapeDtypeStruct((16, 4), jnp.float32),
+             jax.ShapeDtypeStruct((4,), jnp.float32)]
+    with pytest.raises(UnsupportedPrimitive) as ei:
+        capture_function(_ssm, avals)
+    err = ei.value
+    assert err.primitive == "scan"
+    assert "test_from_jaxpr.py" in err.source       # the user's source line
+    assert "unroll budget" in err.reason
+    assert "strict=False" in str(err)
+
+
+def test_unknown_primitive_raises_strict_and_is_opaque_lenient():
+    def f(x):
+        return jnp.sort(x, axis=0)
+    avals = [jax.ShapeDtypeStruct((8,), jnp.float32)]
+    with pytest.raises(UnsupportedPrimitive) as ei:
+        capture_function(f, avals)
+    assert ei.value.primitive == "sort"
+    assert "test_from_jaxpr.py" in ei.value.source
+    g = capture_function(f, avals, strict=False)    # lenient: opaque term
+    assert any("opaque:sort" in repr(t) for _, t in g.defs)
+
+
+def test_strict_spmd_capture_raises_too():
+    def f(x):
+        return jax.lax.psum(jnp.sort(x, axis=0), "tp")
+    avals = [jax.ShapeDtypeStruct((8,), jnp.float32)]
+    with pytest.raises(UnsupportedPrimitive):
+        capture_spmd_function(f, {"tp": 2}, [P("tp")], avals)
+
+
+def test_strict_hook_is_scoped():
+    # after a strict failure the lenient path must be back to normal
+    def f(x):
+        return jnp.sort(x, axis=0)
+    avals = [jax.ShapeDtypeStruct((8,), jnp.float32)]
+    with pytest.raises(UnsupportedPrimitive):
+        capture_function(f, avals)
+    g = capture_function(f, avals, strict=False)
+    assert any("opaque:" in repr(t) for _, t in g.defs)
+
+
+def test_supported_primitives_is_a_real_vocabulary():
+    assert {"dot_general", "psum", "all_gather", "reduce_sum",
+            "concatenate", "tanh", "add"} <= SUPPORTED_PRIMITIVES
+    assert "sort" not in SUPPORTED_PRIMITIVES
+
+
+def test_source_location_is_best_effort():
+    class NoInfo:
+        source_info = None
+    assert source_location(NoInfo()) == "<unknown>"
+
+
+# ---------------------------------------------------------------------------
+# verify_functions verdicts
+# ---------------------------------------------------------------------------
+
+def _seq_mlp(x, w1, w2):
+    return jnp.tanh(x @ w1) @ w2
+
+
+def _dist_mlp(x, w1, w2):
+    return jax.lax.psum(jnp.tanh(x @ w1) @ w2, "tp")
+
+
+def _dist_mlp_halved(x, w1, w2):
+    return jax.lax.psum(jnp.tanh(x @ w1) @ w2, "tp") * 0.5
+
+
+_MLP_AVALS = [jax.ShapeDtypeStruct(s, jnp.float32)
+              for s in ((4, 8), (8, 8), (8, 8))]
+_MLP_SPECS = (P(), P(None, "tp"), P("tp", None))
+
+
+def test_verify_functions_certificate():
+    r = verify_functions(_seq_mlp, _dist_mlp, {"tp": 2}, _MLP_SPECS,
+                         avals=_MLP_AVALS)
+    assert r.verdict == "certificate" and r.ok
+    assert r.r_o                      # non-empty clean output relation
+    assert r.case == "_dist_mlp" and r.degree == 2
+
+
+def test_verify_functions_refinement_error_localizes():
+    r = verify_functions(_seq_mlp, _dist_mlp_halved, {"tp": 2}, _MLP_SPECS,
+                         avals=_MLP_AVALS, name="halved")
+    assert r.verdict == "refinement_error" and not r.ok
+    assert r.case == "halved"
+    assert "op_index" in r.localization and "op_name" in r.localization
+
+
+def test_verify_functions_unsupported_becomes_error_verdict():
+    def dist_sorted(x, w1, w2):
+        return jax.lax.psum(jnp.sort(jnp.tanh(x @ w1) @ w2, axis=0), "tp")
+    r = verify_functions(_seq_mlp, dist_sorted, {"tp": 2}, _MLP_SPECS,
+                         avals=_MLP_AVALS)
+    assert r.verdict == "error"
+    assert "UnsupportedPrimitive" in r.error and "sort" in r.error
+
+
+def test_example_args_instead_of_avals():
+    args = [jnp.zeros(a.shape, a.dtype) for a in _MLP_AVALS]
+    r = verify_functions(_seq_mlp, _dist_mlp, {"tp": 2}, _MLP_SPECS,
+                         example_args=args)
+    assert r.verdict == "certificate"
+
+
+def test_caller_mistakes_raise_not_verdict():
+    with pytest.raises(ValueError):   # both avals and example_args
+        verify_functions(_seq_mlp, _dist_mlp, {"tp": 2}, _MLP_SPECS,
+                         avals=_MLP_AVALS, example_args=_MLP_AVALS)
+    with pytest.raises(ValueError):   # neither
+        verify_functions(_seq_mlp, _dist_mlp, {"tp": 2}, _MLP_SPECS)
+    with pytest.raises(ValueError):   # in_specs arity mismatch
+        verify_functions(_seq_mlp, _dist_mlp, {"tp": 2}, (P(),),
+                         avals=_MLP_AVALS)
+
+
+def test_function_spec_defaults():
+    spec = function_spec(_seq_mlp, _dist_mlp, {"tp": 2}, _MLP_SPECS,
+                         avals=_MLP_AVALS)
+    assert spec.name == "_dist_mlp" and spec.degree == 2
+    assert spec.input_names == ("x", "w1", "w2")    # from the signature
+    spec2d = function_spec(_seq_mlp, _dist_mlp, {"dp": 2, "tp": 2},
+                           (P(), P(None, "tp"), P("tp", None)),
+                           avals=_MLP_AVALS, name="mlp2d")
+    assert spec2d.name == "mlp2d" and spec2d.degree == (2, 2)
+
+
+def test_default_input_names_fallback():
+    assert default_input_names(_seq_mlp, 3) == ["x", "w1", "w2"]
+    assert default_input_names(lambda *a: a, 2) == ["arg0", "arg1"]
+
+
+def test_normalize_mesh_forms():
+    assert normalize_mesh({"tp": 2}) == {"tp": 2}
+    assert normalize_mesh([("dp", 2), ("tp", 4)]) == {"dp": 2, "tp": 4}
+    with pytest.raises(ValueError):
+        normalize_mesh({"tp": 0})
+    with pytest.raises(TypeError):
+        normalize_mesh(42)
+
+
+# ---------------------------------------------------------------------------
+# the --fn CLI path (schema-v2 JSON envelope, exit codes)
+# ---------------------------------------------------------------------------
+
+def _fn_cli(capsys, argv):
+    try:
+        verify_main(argv)
+        rc = 0
+    except SystemExit as e:
+        rc = int(e.code or 0)
+    return rc, capsys.readouterr().out
+
+
+def test_cli_fn_example_task(capsys):
+    rc, out = _fn_cli(capsys, ["--fn",
+                               "examples/verify_your_own_fn.py:make_task",
+                               "--json"])
+    assert rc == 0
+    env = json.loads(out)
+    assert env["schema_version"] == 2 and env["kind"] == "fn"
+    assert env["report"]["verdict"] == "certificate"
+    assert env["report"]["case"] == "my_tp_mlp"
+
+
+def test_cli_fn_bad_target_is_harness_error(capsys):
+    rc, _ = _fn_cli(capsys, ["--fn", "examples/no_such_file.py:make_task"])
+    assert rc == 2
+    rc, _ = _fn_cli(capsys, ["--fn", "not-a-target"])
+    assert rc == 2
+
+
+def test_cli_fn_excludes_case_flags(capsys):
+    rc, _ = _fn_cli(capsys, ["--fn",
+                             "examples/verify_your_own_fn.py:make_task",
+                             "--case", "tp_layer"])
+    assert rc == 2
