@@ -5,7 +5,7 @@ PYTEST ?= $(PY) -m pytest
 
 .PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden \
 	modelcheck-smoke gradcheck-smoke servecheck-smoke chaos-smoke \
-	cache-smoke fn-smoke docs-check
+	cache-smoke fn-smoke obs-smoke docs-check
 
 # tier-1 gate: full test suite
 verify:
@@ -90,8 +90,17 @@ fn-smoke:
 	PYTHONPATH=src $(PY) -m repro.launch.verify \
 		--fn examples/verify_your_own_fn.py:make_task --json > /dev/null
 
+# observability gate: a traced pooled run must produce a Perfetto-loadable
+# trace that the inspector can diagnose (its last line names the top lemma)
+obs-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.verify --serve tp_decode \
+		--workers 2 --trace /tmp/graphguard_trace.json --metrics
+	PYTHONPATH=src $(PY) -m repro.obs report /tmp/graphguard_trace.json \
+		| grep "top lemma: "
+
 # docs gates: lemma catalog completeness, CLI --help drift, docstring
-# coverage over repro.core + repro.api (dependency-free AST checker)
+# coverage over repro.core + repro.api + repro.obs (dependency-free AST
+# checker)
 docs-check:
 	$(PY) scripts/check_cli_docs.py
 	$(PY) scripts/check_docstrings.py

@@ -40,6 +40,19 @@ def _cases():
     return verify
 
 
+def _sum_lemma_fires(reports):
+    """Total lemma fires across a scheduler's unique obligations.
+
+    Saturation is deterministic, so this is byte-stable per section and
+    scripts/check_bench.py gates it with exact equality — a changed count
+    means the engine did different work, not that the machine was slow."""
+    total = 0
+    for rep in reports.values():
+        fires = (rep.get("stats") or {}).get("lemma_fires") or {}
+        total += sum(fires.values())
+    return total
+
+
 def _timed_case(verify, case, degree=2, repeats=None):
     """Warmup once, then median-of-N: returns a JSON-ready record.
 
@@ -169,6 +182,7 @@ def modelcheck_bench(rows, out, repeats=None):
             "total_blocks": rep.total_blocks,
             "unique_obligations": rep.unique_obligations,
             "dedup_ratio": rep.dedup_ratio,
+            "lemma_fires": _sum_lemma_fires(rep.reports),
         }
         rows.append((f"modelcheck/{key}", sec[key]["wall_ms"] * 1e3,
                      rep.unique_obligations))
@@ -205,6 +219,7 @@ def gradcheck_bench(rows, out, repeats=None):
             "wall_ms": round(_st.median(walls), 3),
             "infer_ms": round(_st.median(infers), 3),
             "params": len(rep.params),
+            "lemma_fires": _sum_lemma_fires(rep.reports),
         }
         rows.append((f"gradcheck/{key}", sec[key]["wall_ms"] * 1e3,
                      len(rep.params)))
@@ -244,6 +259,7 @@ def servecheck_bench(rows, out, repeats=None):
             "total_steps": rep.total_steps,
             "unique_obligations": rep.unique_obligations,
             "dedup_ratio": rep.dedup_ratio,
+            "lemma_fires": _sum_lemma_fires(rep.reports),
         }
         rows.append((f"servecheck/{key}", sec[key]["wall_ms"] * 1e3,
                      rep.unique_obligations))
@@ -457,7 +473,21 @@ def kernels_bench(rows, out):
     rows.append(("kernels/rmsnorm_ref", dt, x.size))
 
 
+def _pin_hash_seed() -> None:
+    """Re-exec with ``PYTHONHASHSEED=0`` unless already pinned.
+
+    Saturation explores in set-iteration order, so lemma fire counts are
+    only run-to-run reproducible under a fixed hash seed — and the
+    ``lemma_fires`` determinism gate in scripts/check_bench.py compares
+    them with exact equality.  Timings are unaffected either way."""
+    if os.environ.get("PYTHONHASHSEED") == "0":
+        return
+    env = dict(os.environ, PYTHONHASHSEED="0")
+    os.execve(sys.executable, [sys.executable] + sys.argv, env)
+
+
 def main(argv=None) -> None:
+    _pin_hash_seed()
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="verification sections only, median-of-3 (stable "

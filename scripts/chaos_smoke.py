@@ -13,7 +13,12 @@ under ``GRAPHGUARD_CHAOS`` and asserts the runtime's contract:
 * every unafflicted task's certificate is byte-identical to the
   fault-free baseline;
 * a cache entry corrupted on commit is skipped and re-proved on the next
-  run (``recovered_corrupt``), while undamaged entries hit.
+  run (``recovered_corrupt``), while undamaged entries hit;
+* every injected fault is *visible* in a recorded trace — the supervisor
+  emits ``cat: "fault"`` events (``pool.broken``/``task.retry`` for kill
+  faults, ``task.timeout`` for hangs, ``chaos.corrupt_cache`` for cache
+  corruption), so a post-mortem ``repro.obs report`` can always explain
+  what chaos did (see docs/OBSERVABILITY.md).
 
 Exit code 0 only if every assertion holds.
 """
@@ -27,6 +32,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.abspath(__file__)), "..", "src"))
 
 from repro.api import Suite  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
 from repro.runtime import CertificateCache  # noqa: E402
 from repro.runtime.chaos import ENV_SEED, ENV_SPEC, ENV_TARGET  # noqa: E402
 
@@ -60,6 +66,27 @@ def run_suite(timeout_s=BUDGET_S, cache=None):
                          cache=cache if cache is not None else False)
 
 
+def traced_run(**kw):
+    """Run the suite under a fresh tracer; returns (result, events)."""
+    tracer = obs_trace.start("chaos-smoke")
+    try:
+        res = run_suite(**kw)
+    finally:
+        obs_trace.stop()
+    return res, tracer.events
+
+
+def check_fault_visible(events, names, scenario):
+    """The injected fault must leave supervisor-side evidence in the
+    trace — worker-side kill events die with the worker, so these are
+    the parent's ``cat: "fault"`` events (see docs/OBSERVABILITY.md)."""
+    seen = {e["name"] for e in events if e.get("cat") == "fault"}
+    hits = seen & set(names)
+    check(bool(hits),
+          f"{scenario} fault visible in trace "
+          f"(want one of {sorted(names)}, fault events: {sorted(seen)})")
+
+
 def survivors_identical(baseline, result, victim):
     """Every non-victim task must match the baseline byte for byte
     (verdict, expectation, and the full R_o certificate strings)."""
@@ -82,7 +109,7 @@ def main():
     print(f"[chaos-smoke] crash:1 targeting {victim} (SIGSEGV on every "
           f"attempt)")
     set_chaos("crash:1", victim)
-    res = run_suite()
+    res, events = traced_run()
     rep = {r.task_id(): r for r in res}[victim]
     check(len(res) == len(baseline), "every task has a result")
     check(rep.verdict == "error", f"victim verdict is error "
@@ -92,22 +119,26 @@ def main():
     check((rep.runtime or {}).get("attempts", 1) > 1,
           f"bounded retries recorded: {rep.runtime}")
     survivors_identical(baseline, res, victim)
+    check_fault_visible(events, ("pool.broken", "task.retry",
+                                 "worker.crash", "task.failed"), "crash")
 
     print(f"[chaos-smoke] exit:1 targeting {victim} (hard os._exit "
           f"mid-task)")
     set_chaos("exit:1", victim)
-    res = run_suite()
+    res, events = traced_run()
     rep = {r.task_id(): r for r in res}[victim]
     check(rep.verdict == "error", f"victim verdict is error "
                                   f"(got {rep.verdict})")
     check("exit code 3" in (rep.error or ""),
           f"exit cause attributed in error: {rep.error!r}")
     survivors_identical(baseline, res, victim)
+    check_fault_visible(events, ("pool.broken", "task.retry",
+                                 "worker.crash", "task.failed"), "exit")
 
     print(f"[chaos-smoke] hang:1 targeting {victim} "
           f"({HANG_BUDGET_S:g}s budget)")
     set_chaos("hang:1", victim)
-    res = run_suite(timeout_s=HANG_BUDGET_S)
+    res, events = traced_run(timeout_s=HANG_BUDGET_S)
     rep = {r.task_id(): r for r in res}[victim]
     check(rep.verdict == "timeout", f"victim verdict is timeout "
                                     f"(got {rep.verdict})")
@@ -117,14 +148,17 @@ def main():
           f"measured elapsed recorded, not the nominal budget "
           f"({rep.wall_s:.2f}s)")
     survivors_identical(baseline, res, victim)
+    check_fault_visible(events, ("task.timeout",), "hang")
 
     print(f"[chaos-smoke] corrupt_cache:1 targeting {CASES[0]} "
           f"(byte flipped on commit)")
     cache_dir = tempfile.mkdtemp(prefix="graphguard-chaos-cache-")
     try:
         set_chaos("corrupt_cache:1", CASES[0])
-        res = run_suite(cache=cache_dir)
+        res, events = traced_run(cache=cache_dir)
         check(res.ok, "run with corrupting cache still verifies cleanly")
+        check_fault_visible(events, ("chaos.corrupt_cache",),
+                            "corrupt_cache")
         set_chaos(None)
         cache = CertificateCache(cache_dir)
         check(cache.recovered_corrupt >= 1,

@@ -14,6 +14,12 @@ tolerance (default 1.5x, overridable via ``$BENCH_TOLERANCE``) absorbs the
 single-repeat smoke run landing on a noisy CI runner; a real hot-path
 regression (the PR-1/PR-2 optimizations were 1.4-4x) clears it easily.
 
+A second, tolerance-free gate checks ``lemma_fires`` with exact equality
+for every case that records it in both artifacts: saturation is
+deterministic, so a changed fire count means the engine did different
+work — a behaviour change smuggled in as a perf delta — and no amount of
+runner noise excuses it.
+
 Exit codes: 0 ok, 1 regression/missing case, 2 missing input file.
 """
 import argparse
@@ -45,6 +51,16 @@ def collect(bench: dict) -> dict:
         for case, rec in bench.get(sec, {}).items():
             if isinstance(rec, dict) and metric in rec:
                 out[f"{sec}/{case}"] = float(rec[metric])
+    return out
+
+
+def collect_lemma_fires(bench: dict) -> dict:
+    """{"section/case": lemma_fires} wherever the artifact records it."""
+    out = {}
+    for sec in SECTION_METRICS:
+        for case, rec in bench.get(sec, {}).items():
+            if isinstance(rec, dict) and "lemma_fires" in rec:
+                out[f"{sec}/{case}"] = int(rec["lemma_fires"])
     return out
 
 
@@ -105,6 +121,23 @@ def main(argv=None) -> int:
         print(f"[bench-gate] {case:28s} new case "
               f"({fresh[case]:.2f} ms) — not gated until `make bench` "
               f"refreshes the baseline")
+
+    # determinism gate: exact lemma_fires equality, no tolerance — only
+    # for cases recording the count in BOTH artifacts, so older baselines
+    # phase in as `make bench` refreshes them
+    with open(args.baseline) as f:
+        base_fires = collect_lemma_fires(json.load(f))
+    with open(args.fresh) as f:
+        fresh_fires = collect_lemma_fires(json.load(f))
+    for case in sorted(set(base_fires) & set(fresh_fires)):
+        if base_fires[case] != fresh_fires[case]:
+            failures.append(
+                f"{case}: lemma_fires {fresh_fires[case]} vs baseline "
+                f"{base_fires[case]} — saturation is deterministic, the "
+                f"engine's behaviour changed")
+        else:
+            print(f"[bench-gate] {case:28s} "
+                  f"lemma_fires={base_fires[case]} deterministic ok")
 
     if failures:
         print(f"[bench-gate] FAIL: {len(failures)} hot-path regression(s):",

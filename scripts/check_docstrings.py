@@ -3,9 +3,10 @@
 
 The container has no ruff/pydocstyle, so this is a small AST walker
 enforcing the subset of the `D` ruleset we care about — every module,
-public class, and public top-level function in ``src/repro/core`` and
-``src/repro/api`` must carry a docstring (pyproject.toml carries the
-matching ruff configuration for environments that do have ruff).
+public class, and public top-level function in ``src/repro/core``,
+``src/repro/api`` and ``src/repro/obs`` must carry a docstring
+(pyproject.toml carries the matching ruff configuration for environments
+that do have ruff).
 
 Exit codes: 0 clean, 1 findings (one ``path:line: message`` per line).
 """
@@ -15,7 +16,8 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PACKAGES = [os.path.join("src", "repro", "core"),
-            os.path.join("src", "repro", "api")]
+            os.path.join("src", "repro", "api"),
+            os.path.join("src", "repro", "obs")]
 
 
 def is_public(name: str) -> bool:
@@ -54,7 +56,7 @@ def main() -> int:
     if findings:
         print(f"{len(findings)} missing docstring(s)")
         return 1
-    print("docstring coverage: core + api clean")
+    print("docstring coverage: core + api + obs clean")
     return 0
 
 

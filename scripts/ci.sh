@@ -75,11 +75,18 @@ case "$target" in
                PYTHONPATH=src python -m repro.launch.verify \
                  --fn examples/verify_your_own_fn.py:make_task --json \
                  > /dev/null ;;
+  # observability gate: a traced pooled run must produce a Perfetto-loadable
+  # trace that the inspector can diagnose (last line names the top lemma)
+  obs-smoke)   PYTHONPATH=src python -m repro.launch.verify \
+                 --serve tp_decode --workers 2 \
+                 --trace /tmp/graphguard_trace.json --metrics
+               PYTHONPATH=src python -m repro.obs report \
+                 /tmp/graphguard_trace.json | grep "top lemma: " ;;
   # docs gates: lemma catalog completeness, CLI --help drift, docstring
-  # coverage over repro.core + repro.api (no external linters needed)
+  # coverage over repro.core + repro.api + repro.obs (no external linters)
   docs-check)  python scripts/check_cli_docs.py
                python scripts/check_docstrings.py
                PYTHONPATH=src python -m pytest -x -q tests/test_docs.py ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|servecheck-smoke|chaos-smoke|cache-smoke|fn-smoke|docs-check)" >&2
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|servecheck-smoke|chaos-smoke|cache-smoke|fn-smoke|obs-smoke|docs-check)" >&2
      exit 2 ;;
 esac

@@ -25,6 +25,7 @@ from typing import Optional, Union
 from ..core import (Certificate, RefinementError, capture, capture_spmd,
                     check_refinement, expand_spmd)
 from ..core.profile import CONFIG, set_optimizations
+from ..obs import trace as obs_trace
 from .registry import build_spec
 from .report import Report
 from .spec import StrategySpec
@@ -85,11 +86,18 @@ def run_spec(spec: StrategySpec, *, engine_opts: Optional[dict] = None
     if not isinstance(engine_opts, _engine_opts):
         engine_opts = _engine_opts(engine_opts)
     with engine_opts as eo:
-        gs = capture(spec.seq_fn, list(spec.avals), list(spec.input_names))
-        cap = capture_spmd(spec.dist_fn, spec.mesh_axes, list(spec.in_specs),
-                           list(spec.avals), list(spec.input_names))
-        gd, r_i = expand_spmd(cap)
-        return check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+        with obs_trace.span("capture", cat="capture", graph="gs",
+                            case=spec.name):
+            gs = capture(spec.seq_fn, list(spec.avals),
+                         list(spec.input_names))
+        with obs_trace.span("capture", cat="capture", graph="gd",
+                            case=spec.name):
+            cap = capture_spmd(spec.dist_fn, spec.mesh_axes,
+                               list(spec.in_specs), list(spec.avals),
+                               list(spec.input_names))
+            gd, r_i = expand_spmd(cap)
+        with obs_trace.span("infer", cat="engine", case=spec.name):
+            return check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
 
 
 def verify(spec_or_name: Union[str, StrategySpec], *,

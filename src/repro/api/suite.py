@@ -58,8 +58,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 # Back-compat re-exports: these lived here before the fault-tolerant
 # runtime was factored out into repro.runtime.
 from ..runtime import (RuntimeTask, SupervisedPool,  # noqa: F401
-                       execute_inline, resolve_cache, strategy_cache_key,
-                       terminate_pool)
+                       execute_inline, pool_stats, resolve_cache,
+                       strategy_cache_key, terminate_pool)
 from ..runtime.pool import _warm_worker  # noqa: F401 — legacy import path
 from .registry import build_spec, get_strategy, list_bugs, list_strategies
 from .report import Report
@@ -91,11 +91,13 @@ class SuiteResult:
     """Ordered reports + aggregation to JSON / Markdown."""
 
     def __init__(self, reports: List[Report], wall_s: float, workers: int,
-                 cache: Optional[dict] = None):
+                 cache: Optional[dict] = None,
+                 runtime: Optional[dict] = None):
         self.reports = reports
         self.wall_s = wall_s
         self.workers = workers
         self.cache = cache               # persistent-cache stats, if used
+        self.runtime = runtime           # pool_stats() aggregate, if pooled
 
     @property
     def ok(self) -> bool:
@@ -121,6 +123,10 @@ class SuiteResult:
         }
         if self.cache is not None:
             out["cache"] = self.cache
+        if self.runtime is not None:
+            # queue-wait vs on-worker wall aggregate (repro.runtime
+            # pool_stats) — timing-class, so never in stable_summary()
+            out["runtime"] = self.runtime
         return out
 
     def stable_summary(self) -> dict:
@@ -239,7 +245,7 @@ class Suite:
              "entries": len(cache),
              "recovered_corrupt": cache.recovered_corrupt}
         return SuiteResult(reports, time.perf_counter() - t0, workers,
-                           cache=cache_stats)
+                           cache=cache_stats, runtime=pool_stats(outcomes))
 
     def _runtime_task(self, task: SuiteTask, timeout_s: float,
                       cache) -> RuntimeTask:

@@ -38,6 +38,7 @@ import time
 from collections import deque
 from typing import Callable, Optional
 
+from ..obs import trace as obs_trace
 from .profile import CONFIG
 from .terms import Term, CLEAN_OPS, tensor as mk_tensor
 
@@ -216,7 +217,13 @@ class EGraph:
             for cid in todo:
                 self._repair(cid)
         if prof is not None:
-            prof.add_time("rebuild", time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            prof.add_time("rebuild", t1 - t0)
+            tracer = obs_trace.current()
+            if tracer is not None and t1 - t0 >= 1e-4:
+                # only spans wide enough to see — congruence repair runs
+                # every round and would otherwise dominate the event log
+                tracer.span_from("rebuild", t0, t1)
 
     def _repair(self, cid: int):
         info = self.classes.get(cid)
@@ -309,6 +316,11 @@ class EGraph:
         indexed = CONFIG.indexed_dispatch
         deferred = CONFIG.deferred_rebuild
         table = self._lemma_index(lemmas) if indexed else None
+        # tracing-only per-lemma accounting; behaviour (and the Profile
+        # per-lemma counters) is identical with the tracer off
+        tracer = obs_trace.current()
+        lemma_ms: Optional[dict] = {} if tracer is not None else None
+        fires_delta: Optional[dict] = {} if tracer is not None else None
         for _ in range(max_iters):
             if self.n_nodes - start_nodes > node_budget:
                 break
@@ -344,17 +356,27 @@ class EGraph:
                             and node.op not in lem.ops:
                         continue
                     try:
-                        eqs = lem.fn(self, node, cid)
+                        if lemma_ms is None:
+                            eqs = lem.fn(self, node, cid)
+                        else:
+                            _lt0 = time.perf_counter()
+                            eqs = lem.fn(self, node, cid)
+                            lemma_ms[lem.name] = lemma_ms.get(lem.name, 0.0) \
+                                + (time.perf_counter() - _lt0) * 1e3
                     except EGraphLimit:
                         raise
                     if prof is not None:
                         prof.count("lemma_calls")
+                        prof.count_lemma(lem.name, bool(eqs))
                     if not eqs:
                         continue
                     if prof is not None:
                         prof.count("lemma_hits")
                     if fire_counts is not None:
                         fire_counts[lem.name] = fire_counts.get(lem.name, 0) + len(eqs)
+                    if fires_delta is not None:
+                        fires_delta[lem.name] = \
+                            fires_delta.get(lem.name, 0) + len(eqs)
                     for lhs, rhs in eqs:
                         la = lhs if isinstance(lhs, int) else self.add_term(lhs)
                         ra = rhs if isinstance(rhs, int) else self.add_term(rhs)
@@ -370,6 +392,13 @@ class EGraph:
             self.rebuild()
             if not self.pending and not grew and self.version == before:
                 break
+        if tracer is not None:
+            tracer.event(
+                "saturate.batch", cat="engine",
+                fires={k: fires_delta[k] for k in sorted(fires_delta)},
+                ms={k: round(lemma_ms[k], 3) for k in sorted(lemma_ms)})
+            tracer.counter("egraph", nodes=self.n_nodes,
+                           classes=len(self.classes))
 
     # -- clean extraction (paper step 4) ---------------------------------------
     def extract_clean(self, cid: int, leaf_ok: Callable[[str], bool],

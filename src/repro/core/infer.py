@@ -38,6 +38,8 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from .capture import Graph
 from .egraph import EGraph, EGraphLimit
 from .lemmas import all_lemmas
@@ -176,6 +178,10 @@ class GraphGuard:
                 self._ready.append(entry)
 
     def _install_inputs(self):
+        with obs_trace.span("install_inputs", cat="engine"):
+            self._install_inputs_inner()
+
+    def _install_inputs_inner(self):
         for name, exprs in self.r_i.items():
             c_s = self.eg.add_term(self.gs.tensor(name))
             for e in exprs:
@@ -210,6 +216,8 @@ class GraphGuard:
         """Install defining equations of G_d nodes whose inputs are related."""
         t0 = time.perf_counter()
         if CONFIG.indexed_frontier:
+            REGISTRY.histogram("engine.frontier_ready").observe(
+                len(self._ready))
             grew = False
             while self._ready:
                 name, term = self._ready.popleft()
@@ -220,7 +228,11 @@ class GraphGuard:
                 grew = True
         else:
             grew = self._grow_frontier_scan()
-        self.profile.add_time("frontier", time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.profile.add_time("frontier", t1 - t0)
+        tracer = obs_trace.current()
+        if tracer is not None and grew:
+            tracer.span_from("frontier", t0, t1)
         if grew:
             self.eg.rebuild()
         return grew
@@ -247,15 +259,18 @@ class GraphGuard:
     # -- timed engine wrappers -------------------------------------------------
     def _saturate(self):
         t0 = time.perf_counter()
-        self.eg.saturate(
-            self.lemmas,
-            fire_counts=self.fire_counts if self.collect_lemma_stats else None)
+        with obs_trace.span("saturate", cat="engine"):
+            self.eg.saturate(
+                self.lemmas,
+                fire_counts=self.fire_counts if self.collect_lemma_stats
+                else None)
         # note: includes rebuild time, which the egraph also reports separately
         self.profile.add_time("saturate", time.perf_counter() - t0)
 
     def _extract(self, cid, leaf_ok):
         t0 = time.perf_counter()
-        out = self.eg.extract_clean(self.eg.find(cid), leaf_ok)
+        with obs_trace.span("extract", cat="engine"):
+            out = self.eg.extract_clean(self.eg.find(cid), leaf_ok)
         self.profile.add_time("extract", time.perf_counter() - t0)
         return out
 
@@ -267,36 +282,39 @@ class GraphGuard:
         leaf_ok = lambda n: is_dist_name(n) or n in self.gd.consts
 
         for i, (out_name, term) in enumerate(self.gs.defs):
-            c_out = self.eg.add_term(self.gs.tensor(out_name))
-            self.eg.merge(c_out, self.eg.add_term(term))
-            self.eg.rebuild()
-            # saturate + frontier to fixpoint (Listing 3 loop); extraction is
-            # the expensive step, so frontier growth is driven to fixpoint
-            # between extractions rather than per-iteration.
-            ce = None
-            for _ in range(6):
-                for _ in range(10):
-                    self._saturate()
-                    if not self._grow_frontier():
+            with obs_trace.span(f"op:{out_name}", cat="engine",
+                                op=term.op, index=i):
+                c_out = self.eg.add_term(self.gs.tensor(out_name))
+                self.eg.merge(c_out, self.eg.add_term(term))
+                self.eg.rebuild()
+                # saturate + frontier to fixpoint (Listing 3 loop);
+                # extraction is the expensive step, so frontier growth is
+                # driven to fixpoint between extractions rather than
+                # per-iteration.
+                ce = None
+                for _ in range(6):
+                    for _ in range(10):
+                        self._saturate()
+                        if not self._grow_frontier():
+                            break
+                    ce = self._extract(c_out, leaf_ok)
+                    if ce is None:
+                        if self.eg.pending:
+                            continue   # saturation budget-truncated — resume
                         break
-                ce = self._extract(c_out, leaf_ok)
+                    before = len(self.related)
+                    self._mark_related(ce)
+                    if len(self.related) == before:
+                        break
                 if ce is None:
-                    if self.eg.pending:
-                        continue   # saturation was budget-truncated — resume
-                    break
-                before = len(self.related)
+                    diag = self.eg.extract_any(self.eg.find(c_out), leaf_ok)
+                    in_maps = {}
+                    for leaf in term.leaves():
+                        if leaf.op == "tensor" and leaf.name in self.relation:
+                            in_maps[leaf.name] = self.relation[leaf.name]
+                    raise RefinementError(i, term.op, out_name, in_maps, diag)
+                self.relation[out_name] = ce
                 self._mark_related(ce)
-                if len(self.related) == before:
-                    break
-            if ce is None:
-                diag = self.eg.extract_any(self.eg.find(c_out), leaf_ok)
-                in_maps = {}
-                for leaf in term.leaves():
-                    if leaf.op == "tensor" and leaf.name in self.relation:
-                        in_maps[leaf.name] = self.relation[leaf.name]
-                raise RefinementError(i, term.op, out_name, in_maps, diag)
-            self.relation[out_name] = ce
-            self._mark_related(ce)
 
         # Final filter (Listing 1 line 9): R_o maps G_s outputs to
         # expressions over G_d *outputs* only — intermediate per-rank
@@ -323,10 +341,17 @@ class GraphGuard:
             "gs_ops": len(self.gs.defs),
             "gd_ops": len(self.gd.defs),
             "lemma_fires": dict(self.fire_counts),
+            "lemmas": self.profile.lemma_stats(
+                self.fire_counts if self.collect_lemma_stats else None),
             "phase_s": self.profile.phase_seconds(),
             "counters": self.profile.counter_values(),
             "opt": CONFIG.as_dict(),
         }
+        REGISTRY.counter("engine.runs").inc()
+        REGISTRY.counter("engine.lemma_fires").inc(
+            sum(self.fire_counts.values()))
+        REGISTRY.histogram("engine.infer_s").observe(stats["time_s"])
+        REGISTRY.histogram("engine.egraph_nodes").observe(self.eg.n_nodes)
         return Certificate(r_o, dict(self.relation), stats)
 
 

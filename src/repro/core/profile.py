@@ -69,17 +69,40 @@ def set_optimizations(enabled: bool, **overrides) -> None:
 class Profile:
     """Accumulating per-phase timers and counters (all costs are adds)."""
 
-    __slots__ = ("timers", "counters")
+    __slots__ = ("timers", "counters", "lemma_calls_by", "lemma_hits_by")
 
     def __init__(self):
         self.timers: dict[str, float] = {}
         self.counters: dict[str, int] = {}
+        self.lemma_calls_by: dict[str, int] = {}
+        self.lemma_hits_by: dict[str, int] = {}
 
     def add_time(self, phase: str, dt: float) -> None:
         self.timers[phase] = self.timers.get(phase, 0.0) + dt
 
     def count(self, key: str, n: int = 1) -> None:
         self.counters[key] = self.counters.get(key, 0) + n
+
+    def count_lemma(self, name: str, hit: bool) -> None:
+        """One lemma invocation (``hit``: it produced equalities)."""
+        self.lemma_calls_by[name] = self.lemma_calls_by.get(name, 0) + 1
+        if hit:
+            self.lemma_hits_by[name] = self.lemma_hits_by.get(name, 0) + 1
+
+    def lemma_stats(self, fire_counts: dict | None = None) -> dict:
+        """Per-lemma calls/hits (+fires when collected), sorted by name.
+
+        Deterministic across worker counts and tracing on/off — it is
+        surfaced as ``Certificate.stats["lemmas"]``, which ships in the
+        (cached, golden-diffed) certificate payload.
+        """
+        out: dict[str, dict] = {}
+        for name in sorted(self.lemma_calls_by):
+            out[name] = {"calls": self.lemma_calls_by[name],
+                         "hits": self.lemma_hits_by.get(name, 0)}
+            if fire_counts is not None:
+                out[name]["fires"] = fire_counts.get(name, 0)
+        return out
 
     def phase_seconds(self) -> dict:
         return dict(self.timers)

@@ -53,6 +53,10 @@ class TrainReport:
     cache: Optional[dict] = None         # persistent-cache stats (hits,
                                          # misses, entries) — timing-class
                                          # data, never in stable_summary
+    pool: Optional[dict] = None          # runtime pool_stats() aggregate
+                                         # (queue-wait vs on-worker wall)
+                                         # — timing-class data, never in
+                                         # stable_summary
     schema_version: int = TRAIN_REPORT_SCHEMA
 
     def __post_init__(self):

@@ -22,7 +22,7 @@ from ..api.spec import Degree, StrategySpec, task_id
 from ..core import RefinementError, check_refinement, expand_spmd
 from ..core.capture import capture
 from ..core.terms import pretty
-from ..runtime import (RuntimeTask, resolve_cache, run_tasks,
+from ..runtime import (RuntimeTask, pool_stats, resolve_cache, run_tasks,
                        strategy_cache_key)
 from .capture_grad import capture_grad_spmd
 from .obligations import get_train_strategy
@@ -138,12 +138,13 @@ def run_train_obligations(strategy: str, degree: Degree,
                           engine_opts: Optional[dict] = None,
                           timeout_s: float = DEFAULT_TIMEOUT_S,
                           cache=None
-                          ) -> Tuple[Dict[str, dict], int, Optional[dict]]:
+                          ) -> Tuple[Dict[str, dict], int, Optional[dict],
+                                     dict]:
     """Verify every parameter obligation.
 
     Returns ``({param: report dict}, workers actually used, cache stats
-    or None)``.  ``timeout_s`` budgets each parameter obligation
-    individually; ``cache`` takes anything
+    or None, runtime pool stats)``.  ``timeout_s`` budgets each parameter
+    obligation individually; ``cache`` takes anything
     :func:`repro.runtime.resolve_cache` accepts.
     """
     entry = get_train_strategy(strategy)
@@ -179,7 +180,7 @@ def run_train_obligations(strategy: str, degree: Degree,
         "misses": sum(1 for o in outcomes.values() if o.cache == "miss"),
         "entries": len(cache),
         "recovered_corrupt": cache.recovered_corrupt}
-    return reports, used, cache_stats
+    return reports, used, cache_stats, pool_stats(outcomes)
 
 
 def check_train(strategy: str, *, degree: Optional[Degree] = None,
@@ -203,7 +204,7 @@ def check_train(strategy: str, *, degree: Optional[Degree] = None,
         raise ValueError(
             f"bug `{bug}` is not hosted by train strategy `{strategy}` "
             f"(hosted: {sorted(entry.bug_names()) or '-'})")
-    reports, used, cache_stats = run_train_obligations(
+    reports, used, cache_stats, pstats = run_train_obligations(
         strategy, degree, bug=bug, workers=workers,
         engine_opts=engine_opts, timeout_s=timeout_s, cache=cache)
 
@@ -247,4 +248,4 @@ def check_train(strategy: str, *, degree: Optional[Degree] = None,
         params=params, reports=dict(reports), failing_params=failing,
         bug=bug, bug_param=bug_param,
         wall_s=round(time.perf_counter() - t0, 6), workers=used,
-        cache=cache_stats)
+        cache=cache_stats, pool=pstats)

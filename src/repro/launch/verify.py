@@ -44,6 +44,18 @@ with a kind tag per entry.  ``--json`` emits the structured report (a
 ``schema_version`` and per-phase ``timing`` stats so downstream tooling
 can gate on it.  For matrix runs use the suite runner:
 ``python -m repro.api``.
+
+Observability (the ``repro.obs`` subsystem — see docs/OBSERVABILITY.md):
+
+    python -m repro.launch.verify --serve tp_decode --trace trace.json
+    python -m repro.obs report trace.json
+
+``--trace PATH`` records every engine/pool/cache span of the run into a
+Chrome/Perfetto-loadable ``trace.json`` (plus a grep-friendly
+``PATH.jsonl``), merging pool-worker spans onto the same timeline;
+``--metrics`` prints the process-local metrics registry to stderr and —
+under ``--json`` — adds a ``metrics`` key to the envelope.  Neither flag
+changes certificates or stable summaries.
 """
 from __future__ import annotations
 
@@ -58,6 +70,8 @@ from ..core import RefinementError
 from ..dist.strategies import STRATEGY_CASES as CASES  # legacy view re-export
 
 # the --json envelope: {"schema_version", "kind", "timing", "report"}
+# (+ an opt-in "metrics" key — only when --metrics is passed, so default
+# envelopes keep their pinned four-key shape)
 JSON_SCHEMA_VERSION = 2
 
 
@@ -124,13 +138,25 @@ def _print_registry():
         print(f"  [serve] {bug:22s} -> serve@{host:12s} ({bspec.expected})")
 
 
-def _json_envelope(kind: str, report_json: dict, timing: dict) -> str:
-    return json.dumps({
+def _json_envelope(kind: str, report_json: dict, timing: dict,
+                   metrics=None) -> str:
+    env = {
         "schema_version": JSON_SCHEMA_VERSION,
         "kind": kind,
         "timing": timing,
         "report": report_json,
-    }, indent=2, sort_keys=True)
+    }
+    if metrics is not None:
+        env["metrics"] = metrics
+    return json.dumps(env, indent=2, sort_keys=True)
+
+
+def _metrics_snapshot(args):
+    """The registry snapshot for the envelope — None unless --metrics."""
+    if not getattr(args, "metrics", False):
+        return None
+    from ..obs.metrics import REGISTRY
+    return REGISTRY.snapshot()
 
 
 def _case_timing(report) -> dict:
@@ -154,7 +180,8 @@ def _run_model(args, cache) -> int:
         print(f"[modelcheck] {e}", file=sys.stderr)
         return 2
     if args.json:
-        print(_json_envelope("model", report.to_json(), report.timing()))
+        print(_json_envelope("model", report.to_json(), report.timing(),
+                             metrics=_metrics_snapshot(args)))
     else:
         print(report.to_markdown())
         if report.verdict == "certificate":
@@ -191,7 +218,8 @@ def _run_train(args, cache) -> int:
         print(f"[gradcheck] {e}", file=sys.stderr)
         return 2
     if args.json:
-        print(_json_envelope("train", report.to_json(), report.timing()))
+        print(_json_envelope("train", report.to_json(), report.timing(),
+                             metrics=_metrics_snapshot(args)))
     else:
         print(report.to_markdown())
         if report.verdict == "certificate":
@@ -227,7 +255,8 @@ def _run_serve(args, cache) -> int:
         print(f"[servecheck] {e}", file=sys.stderr)
         return 2
     if args.json:
-        print(_json_envelope("serve", report.to_json(), report.timing()))
+        print(_json_envelope("serve", report.to_json(), report.timing(),
+                             metrics=_metrics_snapshot(args)))
     else:
         print(report.to_markdown())
         if report.verdict == "certificate":
@@ -332,7 +361,8 @@ def _run_fn(args) -> int:
     engine_opts = {"max_nodes": 400_000}
     report = verify_functions(engine_opts=engine_opts, **kw)
     if args.json:
-        print(_json_envelope("fn", report.to_json(), _case_timing(report)))
+        print(_json_envelope("fn", report.to_json(), _case_timing(report),
+                             metrics=_metrics_snapshot(args)))
     elif report.verdict == "certificate":
         for k, v in (report.r_o or {}).items():
             print(f"  {k} = {v}")
@@ -448,12 +478,57 @@ def main(argv=None):
     ap.add_argument("--json", action="store_true",
                     help="emit the structured report as JSON (with "
                          "schema_version + per-phase timing)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record engine/pool/cache spans into a Chrome/"
+                         "Perfetto trace JSON at PATH (plus PATH.jsonl); "
+                         "inspect with `python -m repro.obs report PATH`")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics registry to stderr after the "
+                         "run (and add a `metrics` key to the --json "
+                         "envelope)")
     args = ap.parse_args(argv)
     if args.list:
         _print_registry()
         return
+    if args.trace is None and not args.metrics:
+        return _dispatch(ap, args)
+    from ..obs import trace as obs_trace
+    from ..obs.metrics import REGISTRY
+    if args.metrics:
+        REGISTRY.reset()                 # per-run numbers, not per-process
+    tracer = obs_trace.start("main")
+    try:
+        return _dispatch(ap, args)
+    finally:
+        # runs on sys.exit too — bug-detection exit codes (1) still get
+        # their trace/metrics
+        obs_trace.stop()
+        _finish_obs(args, tracer)
+
+
+def _finish_obs(args, tracer) -> None:
+    """Export the trace and/or render the metrics registry (stderr only —
+    stdout stays report/envelope material)."""
+    if args.trace is not None:
+        tracer.write_chrome(args.trace)
+        tracer.write_jsonl(args.trace + ".jsonl")
+        print(f"[obs] wrote {args.trace} (+ {args.trace}.jsonl) — inspect "
+              f"with `python -m repro.obs report {args.trace}`",
+              file=sys.stderr)
+    if args.metrics:
+        from ..obs.metrics import render
+        print(render(), file=sys.stderr)
+
+
+def _dispatch(ap, args):
+    """Route the parsed args to the case/model/train/serve/fn path."""
     from ..api.suite import cache_from_args
+    from ..gradcheck import list_train_bugs
+    from ..modelcheck.decompose import BUGS as model_bugs
     from ..runtime import resolve_cache
+    from ..servecheck import list_serve_bugs
+    train_bugs = sorted(list_train_bugs())
+    serve_bugs = sorted(list_serve_bugs())
     cache = resolve_cache(cache_from_args(args))
     if sum(x is not None
            for x in (args.model, args.train, args.serve, args.fn)) > 1:
@@ -524,7 +599,8 @@ def main(argv=None):
         d = _case_report(args, cache)
         report = Report.from_json(d)
         if args.json:
-            print(_json_envelope("case", d, _case_timing(report)))
+            print(_json_envelope("case", d, _case_timing(report),
+                                 metrics=_metrics_snapshot(args)))
         elif report.verdict == "certificate":
             for k, v in (report.r_o or {}).items():
                 print(f"  {k} = {v}")

@@ -26,8 +26,9 @@ from ..core import (RefinementError, capture, capture_spmd, check_refinement,
 from ..core.terms import pretty
 from ..models.config import ModelConfig
 from ..models.registry import load_config
-from ..runtime import (RuntimeTask, obligation_cache_key, resolve_cache,
-                       run_tasks)
+from ..obs import trace as obs_trace
+from ..runtime import (RuntimeTask, obligation_cache_key, pool_stats,
+                       resolve_cache, run_tasks)
 from ..sharding.specs import MeshPlan
 from .decompose import Decomposition, decompose, list_model_ids
 from .obligations import Obligation
@@ -149,14 +150,14 @@ def run_obligations(dec: Decomposition, workers: Optional[int] = None,
                     engine_opts: Optional[dict] = None,
                     timeout_s: float = DEFAULT_TIMEOUT_S,
                     cache=None
-                    ) -> Tuple[Dict[str, dict], int, Optional[dict]]:
+                    ) -> Tuple[Dict[str, dict], int, Optional[dict], dict]:
     """Verify the decomposition's unique obligations.
 
     Returns ``({key: report dict}, workers actually used, cache stats or
-    None)``.  ``timeout_s`` budgets each obligation individually — the
-    runtime starts the clock when the obligation starts on a worker, so a
-    slow obligation times out alone instead of marking everything queued
-    behind it.  ``cache`` takes anything
+    None, runtime pool stats)``.  ``timeout_s`` budgets each obligation
+    individually — the runtime starts the clock when the obligation
+    starts on a worker, so a slow obligation times out alone instead of
+    marking everything queued behind it.  ``cache`` takes anything
     :func:`repro.runtime.resolve_cache` accepts.
     """
     keys = dec.obset.keys_in_order()
@@ -195,7 +196,7 @@ def run_obligations(dec: Decomposition, workers: Optional[int] = None,
         "misses": sum(1 for o in outcomes.values() if o.cache == "miss"),
         "entries": len(cache),
         "recovered_corrupt": cache.recovered_corrupt}
-    return reports, used, cache_stats
+    return reports, used, cache_stats, pool_stats(outcomes)
 
 
 def check_model(model: Union[str, ModelConfig], plan: Union[str, MeshPlan],
@@ -215,8 +216,10 @@ def check_model(model: Union[str, ModelConfig], plan: Union[str, MeshPlan],
     """
     t0 = time.perf_counter()
     dec = decompose(model, plan, bug=bug, bug_layer=bug_layer)
-    reports, used, cache_stats = run_obligations(
+    obs_trace.event("dedup", cat="engine", subsystem="modelcheck",
+                    total=dec.total_blocks, unique=dec.n_unique)
+    reports, used, cache_stats, pstats = run_obligations(
         dec, workers=workers, engine_opts=engine_opts,
         timeout_s=timeout_s, cache=cache)
     return stitch(dec, reports, time.perf_counter() - t0, used,
-                  cache_stats=cache_stats)
+                  cache_stats=cache_stats, pool=pstats)

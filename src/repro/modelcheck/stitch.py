@@ -35,7 +35,8 @@ def expected_output_relation(base_name: str, local_shape, dtype: str,
 
 
 def stitch(dec: Decomposition, reports: Dict[str, dict], wall_s: float,
-           workers: int, cache_stats: Dict = None) -> ModelReport:
+           workers: int, cache_stats: Dict = None,
+           pool: Dict = None) -> ModelReport:
     """Assemble per-obligation reports into the whole-model verdict.
 
     Per-block verdicts come from the dedup cache (``reports`` is keyed by
@@ -88,4 +89,4 @@ def stitch(dec: Decomposition, reports: Dict[str, dict], wall_s: float,
         reports=dict(reports), failing_blocks=failing,
         bug=dec.bug, bug_layer=dec.bug_layer,
         gs_ops_total=gs_ops_total, wall_s=round(wall_s, 6), workers=workers,
-        cache=cache_stats)
+        cache=cache_stats, pool=pool)

@@ -1,0 +1,33 @@
+"""``repro.obs`` — dependency-free tracing + metrics for the verifier.
+
+Two independent facilities, both zero-cost when idle:
+
+* :mod:`repro.obs.trace` — a :class:`Tracer` recording nested spans and
+  instant events per process (lock-free appends under the GIL), merged
+  across ``SupervisedPool`` workers via the pool's existing Manager
+  plumbing, and exported as a Chrome/Perfetto ``trace.json`` plus a
+  JSONL event log.
+* :mod:`repro.obs.metrics` — a process-local registry of counters and
+  bounded histograms (lemma fires, e-graph growth, queue wait vs run
+  wall, cache hit ratio, retry/degradation counts).
+
+Inspection: ``python -m repro.obs report trace.json`` renders the top
+lemmas by time, the slowest obligations with their queue-vs-run split,
+a per-worker pool timeline, cache/dedup savings, and any fault events.
+
+Observability is strictly behaviour-neutral: certificates, goldens, and
+stable summaries are byte-identical with tracing on or off (enforced by
+``tests/test_obs.py``), and the package is deliberately excluded from
+the certificate-cache engine fingerprint.  See ``docs/OBSERVABILITY.md``
+for the span taxonomy and metric names.
+"""
+from . import metrics
+from .metrics import REGISTRY
+from .trace import (Tracer, complete, counter, current, event, install,
+                    span, start, stop)
+
+__all__ = [
+    "Tracer", "start", "stop", "current", "install",
+    "span", "event", "counter", "complete",
+    "metrics", "REGISTRY",
+]

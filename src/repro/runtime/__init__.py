@@ -18,7 +18,8 @@ from .cache import (CACHE_SCHEMA, DEFAULT_CACHE_DIR, CertificateCache,
                     obligation_cache_key, resolve_cache, serve_cache_key,
                     spec_token, strategy_cache_key)
 from .pool import (PoolUnavailable, RuntimeTask, SupervisedPool,
-                   TaskOutcome, execute_inline, run_tasks, terminate_pool)
+                   TaskOutcome, execute_inline, pool_stats, run_tasks,
+                   terminate_pool)
 from . import chaos
 
 __all__ = [
@@ -26,6 +27,6 @@ __all__ = [
     "cacheable_report", "engine_fingerprint", "obligation_cache_key",
     "resolve_cache", "serve_cache_key", "spec_token", "strategy_cache_key",
     "PoolUnavailable", "RuntimeTask", "SupervisedPool", "TaskOutcome",
-    "execute_inline", "run_tasks", "terminate_pool",
+    "execute_inline", "pool_stats", "run_tasks", "terminate_pool",
     "chaos",
 ]

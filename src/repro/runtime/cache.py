@@ -40,6 +40,8 @@ import tempfile
 from functools import lru_cache
 from typing import Any, Dict, Optional, Union
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from . import chaos
 
 CACHE_SCHEMA = 1
@@ -241,6 +243,11 @@ class CertificateCache:
 
     def get(self, key: str) -> Optional[dict]:
         v = self._mem.get(key)
+        result = "miss" if v is None else "hit"
+        obs_trace.event("cache.probe", cat="cache", key=key.split(":", 1)[0],
+                        digest=key[-12:], result=result)
+        REGISTRY.counter("cache.hits" if v is not None
+                         else "cache.misses").inc()
         if v is None:
             self.misses += 1
             return None
@@ -250,6 +257,9 @@ class CertificateCache:
     def put(self, key: str, value: dict) -> None:
         """Commit one entry: append + flush + fsync.  The entry is durable
         (and will be resumed from) once this returns."""
+        obs_trace.event("cache.commit", cat="cache",
+                        key=key.split(":", 1)[0], digest=key[-12:])
+        REGISTRY.counter("cache.commits").inc()
         line = _line_for(key, value)
         with open(self.journal_path, "ab") as f:
             offset = f.tell()

@@ -45,6 +45,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
+
 ENV_SPEC = "GRAPHGUARD_CHAOS"
 ENV_TARGET = "GRAPHGUARD_CHAOS_TARGET"
 ENV_SEED = "GRAPHGUARD_CHAOS_SEED"
@@ -148,17 +151,34 @@ def maybe_fault(key: str, attempt: int = 0) -> None:
     if cfg is None:
         return
     if should("crash", key, attempt, cfg):
+        _note_injection("crash", key, attempt)
         signal.signal(signal.SIGSEGV, signal.SIG_DFL)
         os.kill(os.getpid(), signal.SIGSEGV)
         time.sleep(HANG_S)               # pragma: no cover — never reached
     if should("exit", key, attempt, cfg):
+        _note_injection("exit", key, attempt)
         os._exit(3)
     if should("hang", key, attempt, cfg):
+        _note_injection("hang", key, attempt)
         time.sleep(HANG_S)
+
+
+def _note_injection(mode: str, key: str, attempt: int) -> None:
+    """Record the injection on the local tracer/registry.  Worker-side
+    kill modes usually take the tracer down with the process — the
+    supervisor's fault events are what make those visible in the merged
+    trace — but ``hang`` (and any future soft mode) is captured here."""
+    obs_trace.event(f"chaos.{mode}", cat="fault", key=key, attempt=attempt)
+    REGISTRY.counter("chaos.injected").inc()
 
 
 def corrupt_cache_entry(key: str) -> bool:
     """Should the cache flip a byte in the entry just committed for
     ``key``?  (Cache corruption is a *storage* fault, so unlike the
     worker faults it may fire in any process.)"""
-    return should("corrupt_cache", key)
+    hit = should("corrupt_cache", key)
+    if hit:
+        obs_trace.event("chaos.corrupt_cache", cat="fault",
+                        key=key.split(":", 1)[0], digest=key[-12:])
+        REGISTRY.counter("chaos.injected").inc()
+    return hit

@@ -49,6 +49,8 @@ from concurrent.futures import ProcessPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from . import chaos
 from .cache import CertificateCache, cacheable_report
 
@@ -85,7 +87,8 @@ class TaskOutcome:
     status: str                          # ok | timeout | error
     value: Any = None                    # fn's return (status == ok)
     error: Optional[str] = None          # cause (timeout/error statuses)
-    wall_s: float = 0.0                  # supervisor-measured elapsed
+    wall_s: float = 0.0                  # on-worker elapsed (budget clock)
+    queue_s: float = 0.0                 # waited behind pool siblings
     attempts: int = 1
     executor: str = "pool"               # pool | inline
     degraded_reason: Optional[str] = None
@@ -94,6 +97,14 @@ class TaskOutcome:
     @property
     def ok(self) -> bool:
         return self.status == "ok"
+
+    def timing_info(self) -> dict:
+        """Queue wait vs on-worker wall, reported separately — a task
+        queued behind a slow sibling (large ``queue_s``) is a scheduling
+        fact, a slow task (large ``run_s``) an engine fact.  Timing-class
+        data: never part of reports' stable summaries."""
+        return {"queue_s": round(self.queue_s, 6),
+                "run_s": round(self.wall_s, 6)}
 
     def runtime_info(self) -> dict:
         """The non-trivial facts, for embedding in a Report (empty dict
@@ -151,10 +162,21 @@ def _describe_exit(code: Optional[int]) -> str:
 
 
 def _worker_shim(fn: Callable, args: tuple, key: str, attempt: int,
-                 hb, heartbeat_s: float) -> Any:
+                 hb, heartbeat_s: float, sink=None) -> Any:
     """Runs in the pool worker: mark worker context for chaos, record the
-    start beat, keep beating from a daemon thread, then run the task."""
+    start beat, keep beating from a daemon thread, then run the task.
+
+    When the parent is tracing it passes a Manager list as ``sink``: the
+    shim installs a fresh worker :class:`~repro.obs.trace.Tracer`, wraps
+    the task in a ``task`` span (key / attempt / worker pid), and ships
+    the event batch back for the supervisor to absorb — each worker keeps
+    its own pid so the merged trace has one track per worker process.  A
+    worker killed mid-task simply never ships; fault visibility comes
+    from the supervisor-side events.
+    """
     chaos.enter_worker()
+    tracer = obs_trace.Tracer("worker") if sink is not None else None
+    obs_trace.install(tracer)   # clears any fork-inherited parent tracer
     start = time.time()
     if hb is not None:
         try:
@@ -172,9 +194,19 @@ def _worker_shim(fn: Callable, args: tuple, key: str, attempt: int,
         threading.Thread(target=_beat, daemon=True).start()
     try:
         chaos.maybe_fault(key, attempt)  # may segfault/exit/hang here
-        return fn(*args)
+        if tracer is None:
+            return fn(*args)
+        with tracer.span("task", cat="pool", key=key, attempt=attempt,
+                         worker_pid=tracer.pid):
+            return fn(*args)
     finally:
         stop.set()
+        if tracer is not None:
+            obs_trace.install(None)
+            try:
+                sink.append(tracer.events)
+            except Exception:  # noqa: BLE001 — manager gone: drop the batch
+                pass
 
 
 def execute_inline(tasks: Sequence[RuntimeTask],
@@ -201,17 +233,20 @@ def _run_one_inline(task: RuntimeTask, cache, cacheable,
     if hit is not None:
         return hit
     t0 = time.perf_counter()
+    REGISTRY.counter("pool.tasks").inc()
     try:
-        value = task.run_local()
+        with obs_trace.span("task", cat="pool", key=task.key, inline=True):
+            value = task.run_local()
     except Exception as e:  # noqa: BLE001 — one bad task must not sink the run
         return TaskOutcome(
             task.key, "error", executor="inline",
             error=f"task raised in-process: {type(e).__name__}: {e}",
             wall_s=time.perf_counter() - t0,
             degraded_reason=degraded_reason)
+    wall_s = time.perf_counter() - t0
+    REGISTRY.histogram("pool.run_s").observe(wall_s)
     out = TaskOutcome(task.key, "ok", value=value, executor="inline",
-                      wall_s=time.perf_counter() - t0,
-                      degraded_reason=degraded_reason,
+                      wall_s=wall_s, degraded_reason=degraded_reason,
                       cache=_commit(task, value, cache, cacheable))
     return out
 
@@ -264,6 +299,7 @@ class SupervisedPool:
         self._executor: Optional[ProcessPoolExecutor] = None
         self._manager = None
         self._hb = None                  # manager dict: key -> (start, beat)
+        self._sink = None                # manager list: worker trace batches
 
     # -- lifecycle ----------------------------------------------------------
     def __enter__(self) -> "SupervisedPool":
@@ -359,14 +395,68 @@ class SupervisedPool:
                 todo.append(t)
         if not todo:
             return outcomes
+        tracer = obs_trace.current()
+        self._open_sink(tracer)
         try:
             self._supervise(todo, outcomes, cache, cacheable)
         except PoolUnavailable as e:
+            obs_trace.event("pool.degraded", cat="fault", reason=str(e))
+            REGISTRY.counter("pool.degraded").inc()
             remaining = [t for t in todo if t.key not in outcomes]
             outcomes.update(execute_inline(
                 remaining, cache, cacheable,
                 degraded_reason=f"degraded to in-process: {e}"))
+        finally:
+            self._drain_sink(tracer)
         return outcomes
+
+    # -- worker trace merging ------------------------------------------------
+    def _open_sink(self, tracer) -> None:
+        """A fresh Manager list per execute() for worker event batches."""
+        self._sink = None
+        if tracer is None:
+            return
+        self._ensure_heartbeats()
+        if self._manager is not None:
+            try:
+                self._sink = self._manager.list()
+            except Exception:  # noqa: BLE001 — trace merging is best-effort
+                self._sink = None
+
+    def _drain_sink(self, tracer) -> None:
+        """Absorb every worker batch shipped during this execute()."""
+        sink, self._sink = self._sink, None
+        if tracer is None or sink is None:
+            return
+        try:
+            batches = list(sink)
+        except Exception:  # noqa: BLE001 — manager died: events are gone
+            return
+        for batch in batches:
+            tracer.absorb(list(batch))
+
+    def _obs_task_done(self, key: str, submit_t: Dict[str, float],
+                       running_t: Optional[Dict[str, float]], status: str,
+                       wall_s: float, attempt: int = 1) -> float:
+        """Emit the supervisor-side queue/run spans + pool metrics for one
+        finished task; returns its queue wait in seconds."""
+        end = time.time()
+        submit = submit_t.get(key)
+        start = self._start_of(key, submit_t, running_t)
+        queue_s = max(start - submit, 0.0) \
+            if start is not None and submit is not None else 0.0
+        tracer = obs_trace.current()
+        if tracer is not None and submit is not None:
+            if queue_s > 0:
+                tracer.complete("queue", submit, submit + queue_s,
+                                cat="pool", key=key)
+            tracer.complete("run", start if start is not None else submit,
+                            end, cat="pool", key=key, status=status,
+                            attempt=attempt)
+        REGISTRY.counter("pool.tasks").inc()
+        REGISTRY.histogram("pool.queue_s").observe(queue_s)
+        REGISTRY.histogram("pool.run_s").observe(wall_s)
+        return round(queue_s, 6)
 
     def _supervise(self, tasks: List[RuntimeTask], outcomes, cache,
                    cacheable) -> None:
@@ -397,7 +487,8 @@ class SupervisedPool:
             self._clear_beat(key)
             submit_t[key] = time.time()
             futs[pool.submit(_worker_shim, task.fn, task.args, key, 1,
-                             self._hb, self.heartbeat_s)] = key
+                             self._hb, self.heartbeat_s,
+                             self._sink)] = key
         while futs:
             done, _ = wait(set(futs), timeout=_POLL_S,
                            return_when=FIRST_COMPLETED)
@@ -418,15 +509,21 @@ class SupervisedPool:
                     continue
                 except Exception as e:  # noqa: BLE001 — task-level failure
                     pending.pop(key)
+                    wall_s = self._elapsed(key, submit_t, running_t)
                     outcomes[key] = TaskOutcome(
                         key, "error",
                         error=f"worker failed: {type(e).__name__}: {e}",
-                        wall_s=self._elapsed(key, submit_t, running_t))
+                        wall_s=wall_s,
+                        queue_s=self._obs_task_done(key, submit_t,
+                                                    running_t, "error",
+                                                    wall_s))
                     continue
                 pending.pop(key)
+                wall_s = self._elapsed(key, submit_t, running_t)
                 outcomes[key] = TaskOutcome(
-                    key, "ok", value=value,
-                    wall_s=self._elapsed(key, submit_t, running_t),
+                    key, "ok", value=value, wall_s=wall_s,
+                    queue_s=self._obs_task_done(key, submit_t, running_t,
+                                                "ok", wall_s),
                     cache=_commit(task, value, cache, cacheable))
             if broken:
                 cause = self._exit_cause()
@@ -434,6 +531,9 @@ class SupervisedPool:
                 suspects = [k for k in pending
                             if self._beat_of(k) is not None
                             or self._hb is None]
+                obs_trace.event("pool.broken", cat="fault", cause=cause,
+                                suspects=sorted(suspects))
+                REGISTRY.counter("pool.broken").inc()
                 return suspects, cause
             expired = [k for k in list(futs.values())
                        if k in pending
@@ -465,13 +565,17 @@ class SupervisedPool:
         while attempts <= self.max_retries:
             attempts += 1
             if attempts > 1:
+                obs_trace.event("task.retry", cat="fault", key=task.key,
+                                attempt=attempts, cause=cause)
+                REGISTRY.counter("pool.retries").inc()
                 time.sleep(self.backoff_s * 2 ** (attempts - 2))
             pool = self._make_executor(1)
             self._clear_beat(task.key)
             submit_t = {task.key: time.time()}
             running_t: Dict[str, float] = {}
             fut = pool.submit(_worker_shim, task.fn, task.args, task.key,
-                              attempts, self._hb, self.heartbeat_s)
+                              attempts, self._hb, self.heartbeat_s,
+                              self._sink)
             try:
                 while True:
                     done, _ = wait({fut}, timeout=_POLL_S)
@@ -487,20 +591,33 @@ class SupervisedPool:
                     value = fut.result()
                 except BrokenExecutor:
                     cause = self._exit_cause_of(pool) or cause
+                    obs_trace.event("worker.crash", cat="fault",
+                                    key=task.key, attempt=attempts,
+                                    cause=cause)
                     continue             # retry on a replacement worker
                 except Exception as e:  # noqa: BLE001
+                    wall_s = self._elapsed(task.key, submit_t, running_t)
                     outcomes[task.key] = TaskOutcome(
                         task.key, "error", attempts=attempts,
                         error=f"worker failed: {type(e).__name__}: {e}",
-                        wall_s=self._elapsed(task.key, submit_t, running_t))
+                        wall_s=wall_s,
+                        queue_s=self._obs_task_done(task.key, submit_t,
+                                                    running_t, "error",
+                                                    wall_s, attempts))
                     return
+                wall_s = self._elapsed(task.key, submit_t, running_t)
                 outcomes[task.key] = TaskOutcome(
                     task.key, "ok", value=value, attempts=attempts,
-                    wall_s=self._elapsed(task.key, submit_t, running_t),
+                    wall_s=wall_s,
+                    queue_s=self._obs_task_done(task.key, submit_t,
+                                                running_t, "ok", wall_s,
+                                                attempts),
                     cache=_commit(task, value, cache, cacheable))
                 return
             finally:
                 terminate_pool(pool)
+        obs_trace.event("task.failed", cat="fault", key=task.key,
+                        attempts=attempts, cause=cause)
         outcomes[task.key] = TaskOutcome(
             task.key, "error", attempts=attempts,
             error=f"worker crashed on all {attempts} attempts "
@@ -559,11 +676,37 @@ class SupervisedPool:
                         "during startup")
         else:
             liveness = "no heartbeat channel — submit-time budget"
+        obs_trace.event("task.timeout", cat="fault", key=task.key,
+                        elapsed=round(elapsed, 3), liveness=liveness)
+        REGISTRY.counter("pool.timeouts").inc()
         return TaskOutcome(
             task.key, "timeout", attempts=attempts,
             error=f"exceeded per-task budget of {task.budget_s:g}s "
                   f"(ran {elapsed:.1f}s; {liveness})",
-            wall_s=elapsed)
+            wall_s=elapsed,
+            queue_s=self._obs_task_done(task.key, submit_t, running_t,
+                                        "timeout", elapsed, attempts))
+
+
+def pool_stats(outcomes: Dict[str, TaskOutcome]) -> dict:
+    """Aggregate queue-wait vs on-worker wall over a run's outcomes.
+
+    Timing-class data for the report families' ``pool`` field and
+    ``SuiteResult.summary()["runtime"]`` — never part of stable
+    summaries (queue waits vary with worker count and machine load).
+    Cache hits (``attempts == 0``) are excluded: they never occupied a
+    worker.
+    """
+    executed = [o for o in outcomes.values() if o.attempts > 0]
+    return {
+        "tasks": len(executed),
+        "queue_s_sum": round(sum(o.queue_s for o in executed), 6),
+        "run_s_sum": round(sum(o.wall_s for o in executed), 6),
+        "queue_s_max": round(max((o.queue_s for o in executed),
+                                 default=0.0), 6),
+        "retries": sum(max(o.attempts - 1, 0) for o in executed),
+        "timeouts": sum(1 for o in executed if o.status == "timeout"),
+    }
 
 
 def run_tasks(tasks: Sequence[RuntimeTask], workers: int,

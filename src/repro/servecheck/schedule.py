@@ -25,7 +25,8 @@ from ..core import (RefinementError, capture, capture_spmd, check_refinement,
 from ..core.terms import pretty
 from ..modelcheck.obligations import Obligation
 from ..modelcheck.stitch import expected_output_relation
-from ..runtime import (RuntimeTask, resolve_cache, run_tasks,
+from ..obs import trace as obs_trace
+from ..runtime import (RuntimeTask, pool_stats, resolve_cache, run_tasks,
                        serve_cache_key)
 from .obligations import ServeStrategy, get_serve_strategy
 from .report import ServeReport, StepResult
@@ -137,12 +138,13 @@ def run_serve_obligations(strategy: str, degree: Degree,
                           engine_opts: Optional[dict] = None,
                           timeout_s: float = DEFAULT_TIMEOUT_S,
                           cache=None
-                          ) -> Tuple[Dict[str, dict], int, Optional[dict]]:
+                          ) -> Tuple[Dict[str, dict], int, Optional[dict],
+                                     dict]:
     """Verify the strategy's unique serving obligations.
 
     Returns ``({obligation key: report dict}, workers actually used,
-    cache stats or None)``.  ``timeout_s`` budgets each obligation
-    individually; ``cache`` takes anything
+    cache stats or None, runtime pool stats)``.  ``timeout_s`` budgets
+    each obligation individually; ``cache`` takes anything
     :func:`repro.runtime.resolve_cache` accepts.
     """
     entry = get_serve_strategy(strategy)
@@ -177,7 +179,7 @@ def run_serve_obligations(strategy: str, degree: Degree,
         "misses": sum(1 for o in outcomes.values() if o.cache == "miss"),
         "entries": len(cache),
         "recovered_corrupt": cache.recovered_corrupt}
-    return reports, used, cache_stats
+    return reports, used, cache_stats, pool_stats(outcomes)
 
 
 def check_serve(strategy: str, *, degree: Optional[Degree] = None,
@@ -203,7 +205,9 @@ def check_serve(strategy: str, *, degree: Optional[Degree] = None,
             f"bug `{bug}` is not hosted by serve strategy `{strategy}` "
             f"(hosted: {sorted(entry.bug_names()) or '-'})")
     obset = entry.build(degree=degree, bug=bug)
-    reports, used, cache_stats = run_serve_obligations(
+    obs_trace.event("dedup", cat="engine", subsystem="servecheck",
+                    total=obset.total_blocks, unique=obset.n_unique)
+    reports, used, cache_stats, pstats = run_serve_obligations(
         strategy, degree, bug=bug, workers=workers,
         engine_opts=engine_opts, timeout_s=timeout_s, cache=cache)
 
@@ -255,4 +259,4 @@ def check_serve(strategy: str, *, degree: Optional[Degree] = None,
         dedup_ratio=round(obset.dedup_ratio, 3),
         failing_steps=failing, bug=bug, bug_step=bug_step,
         wall_s=round(time.perf_counter() - t0, 6), workers=used,
-        cache=cache_stats)
+        cache=cache_stats, pool=pstats)

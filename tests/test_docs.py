@@ -83,7 +83,8 @@ def test_docstring_coverage_gate():
 def test_architecture_covers_every_subsystem():
     doc = _read("ARCHITECTURE.md")
     for pkg in ("repro.core", "repro.api", "repro.runtime",
-                "repro.modelcheck", "repro.gradcheck", "repro.servecheck"):
+                "repro.modelcheck", "repro.gradcheck", "repro.servecheck",
+                "repro.obs"):
         assert pkg in doc, pkg
 
 
@@ -94,3 +95,38 @@ def test_architecture_links_resolve():
             continue
         assert os.path.exists(os.path.join(ROOT, target)), \
             f"ARCHITECTURE.md links to missing path {target}"
+
+
+# ---------------------------------------------------------------------------
+# docs/OBSERVABILITY.md — metric names and span taxonomy track the code
+# ---------------------------------------------------------------------------
+
+def _source_metric_names():
+    names = set()
+    for dirpath, _dirs, files in os.walk(os.path.join(ROOT, "src", "repro")):
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            with open(os.path.join(dirpath, fn), encoding="utf-8") as f:
+                src = f.read()
+            names |= set(re.findall(
+                r'REGISTRY\.(?:counter|histogram)\(\s*"([a-z_.]+)"', src))
+    return names
+
+
+def test_observability_doc_covers_every_live_metric():
+    doc = _read("docs", "OBSERVABILITY.md")
+    documented = set(re.findall(r"`([a-z_]+\.[a-z_]+)`", doc))
+    live = _source_metric_names()
+    assert live, "no REGISTRY.counter/histogram call sites found in src"
+    missing = live - documented
+    assert not missing, \
+        f"metrics without a docs/OBSERVABILITY.md entry: {missing}"
+
+
+def test_observability_doc_names_key_spans():
+    doc = _read("docs", "OBSERVABILITY.md")
+    for name in ("capture", "infer", "saturate", "extract", "task",
+                 "queue", "run", "saturate.batch", "cache.probe",
+                 "task.retry", "task.timeout", "pool.degraded"):
+        assert f"`{name}`" in doc, name

@@ -188,7 +188,7 @@ def _stable_envelope(env):
     env = json.loads(json.dumps(env))     # deep copy
     env.pop("timing", None)
     rep = env["report"]
-    for k in ("wall_s", "workers", "timing"):
+    for k in ("wall_s", "workers", "timing", "pool"):
         rep.pop(k, None)
     for nested in (rep.get("reports") or {}).values():
         nested.pop("stats", None)
