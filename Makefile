@@ -5,7 +5,7 @@ PYTEST ?= $(PY) -m pytest
 
 .PHONY: verify quick bench-smoke bench bench-gate bug-suite suite golden \
 	modelcheck-smoke gradcheck-smoke servecheck-smoke chaos-smoke \
-	cache-smoke fn-smoke obs-smoke docs-check
+	cache-smoke fn-smoke obs-smoke explain-smoke docs-check
 
 # tier-1 gate: full test suite
 verify:
@@ -97,6 +97,13 @@ obs-smoke:
 		--workers 2 --trace /tmp/graphguard_trace.json --metrics
 	PYTHONPATH=src $(PY) -m repro.obs report /tmp/graphguard_trace.json \
 		| grep "top lemma: "
+
+# proof-provenance gate: every clean certificate's lemma chain must pass
+# the independent replay checker; every injected smoke bug must produce a
+# failure-frontier narrative naming the stuck op and the fired lemmas;
+# explain-off runs stay byte-identical
+explain-smoke:
+	PYTHONPATH=src $(PY) scripts/explain_smoke.py
 
 # docs gates: lemma catalog completeness, CLI --help drift, docstring
 # coverage over repro.core + repro.api + repro.obs (dependency-free AST

@@ -17,8 +17,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = e-graph nodes or
 counts, per section) and writes machine-readable ``BENCH_verify.json``
-(per-case wall/infer time, e-graph nodes, lemma fires, per-phase timers;
-warmup + median-of-N repeats) so the perf trajectory is tracked across PRs.
+(per-case wall/infer time, e-graph nodes, lemma fires, proof-provenance
+chain steps, per-phase timers; warmup + median-of-N repeats) so the perf
+trajectory is tracked across PRs.
 
     python benchmarks/run.py [--smoke] [--repeats N] [--json PATH]
 """
@@ -38,6 +39,19 @@ REPEATS = 3
 def _cases():
     from repro.api import verify
     return verify
+
+
+def _sum_explain_steps(reports):
+    """Total proof-provenance chain steps across a scheduler's unique
+    obligations (from one untimed explain-on run).
+
+    Chain reconstruction canonicalizes over the term quotient, so the
+    count is byte-stable per section and scripts/check_bench.py gates it
+    with exact equality — a changed count means the proofs themselves
+    changed shape, not that the machine was slow."""
+    from repro.core.explain import explanation_steps
+    return sum(explanation_steps(rep.get("explanation"))
+               for rep in reports.values())
 
 
 def _sum_lemma_fires(reports):
@@ -78,6 +92,11 @@ def _timed_case(verify, case, degree=2, repeats=None):
         report = checked(verify(case, degree=degree))
         walls.append((time.perf_counter() - t0) * 1e3)
         infers.append(report.stats["time_s"] * 1e3)
+    # one extra untimed explain-on run: provenance chain length is a
+    # determinism signal (gated exactly), not a timing
+    from repro.core.explain import explanation_steps
+    xrep = checked(verify(case, degree=degree,
+                          engine_opts={"explain": True}))
     stats = report.stats
     return {
         "wall_ms": round(statistics.median(walls), 3),
@@ -86,6 +105,7 @@ def _timed_case(verify, case, degree=2, repeats=None):
         "gs_ops": stats["gs_ops"],
         "gd_ops": stats["gd_ops"],
         "lemma_fires": sum(stats["lemma_fires"].values()),
+        "explain_steps": explanation_steps(xrep.explanation),
         "phase_ms": {k: round(v * 1e3, 3)
                      for k, v in stats["phase_s"].items()},
         "counters": stats["counters"],
@@ -175,6 +195,8 @@ def modelcheck_bench(rows, out, repeats=None):
             rep = one()
             walls.append((time.perf_counter() - t0) * 1e3)
             infers.append(rep.timing()["infer_s_sum"] * 1e3)
+        xrep = check_model(model, plan, workers=0,
+                           engine_opts={"explain": True})
         key = f"{model}@{plan}"
         sec[key] = {
             "wall_ms": round(_st.median(walls), 3),
@@ -183,6 +205,7 @@ def modelcheck_bench(rows, out, repeats=None):
             "unique_obligations": rep.unique_obligations,
             "dedup_ratio": rep.dedup_ratio,
             "lemma_fires": _sum_lemma_fires(rep.reports),
+            "explain_steps": _sum_explain_steps(xrep.reports),
         }
         rows.append((f"modelcheck/{key}", sec[key]["wall_ms"] * 1e3,
                      rep.unique_obligations))
@@ -214,12 +237,15 @@ def gradcheck_bench(rows, out, repeats=None):
             walls.append((time.perf_counter() - t0) * 1e3)
             infers.append(rep.timing()["infer_s_sum"] * 1e3)
         from repro.api import degree_token
+        xrep = check_train(strategy, degree=degree, workers=0,
+                           engine_opts={"explain": True})
         key = f"train@{strategy}@deg{degree_token(degree)}"
         sec[key] = {
             "wall_ms": round(_st.median(walls), 3),
             "infer_ms": round(_st.median(infers), 3),
             "params": len(rep.params),
             "lemma_fires": _sum_lemma_fires(rep.reports),
+            "explain_steps": _sum_explain_steps(xrep.reports),
         }
         rows.append((f"gradcheck/{key}", sec[key]["wall_ms"] * 1e3,
                      len(rep.params)))
@@ -252,6 +278,8 @@ def servecheck_bench(rows, out, repeats=None):
             walls.append((time.perf_counter() - t0) * 1e3)
             infers.append(rep.timing()["infer_s_sum"] * 1e3)
         from repro.api import degree_token
+        xrep = check_serve(strategy, degree=degree, workers=0,
+                           engine_opts={"explain": True})
         key = f"serve@{strategy}@deg{degree_token(degree)}"
         sec[key] = {
             "wall_ms": round(_st.median(walls), 3),
@@ -260,6 +288,7 @@ def servecheck_bench(rows, out, repeats=None):
             "unique_obligations": rep.unique_obligations,
             "dedup_ratio": rep.dedup_ratio,
             "lemma_fires": _sum_lemma_fires(rep.reports),
+            "explain_steps": _sum_explain_steps(xrep.reports),
         }
         rows.append((f"servecheck/{key}", sec[key]["wall_ms"] * 1e3,
                      rep.unique_obligations))

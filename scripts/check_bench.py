@@ -14,11 +14,12 @@ tolerance (default 1.5x, overridable via ``$BENCH_TOLERANCE``) absorbs the
 single-repeat smoke run landing on a noisy CI runner; a real hot-path
 regression (the PR-1/PR-2 optimizations were 1.4-4x) clears it easily.
 
-A second, tolerance-free gate checks ``lemma_fires`` with exact equality
-for every case that records it in both artifacts: saturation is
-deterministic, so a changed fire count means the engine did different
-work — a behaviour change smuggled in as a perf delta — and no amount of
-runner noise excuses it.
+A second, tolerance-free gate checks ``lemma_fires`` and
+``explain_steps`` with exact equality for every case that records them
+in both artifacts: saturation and proof-chain reconstruction are
+deterministic, so a changed count means the engine did different work
+(or the reconstructed proofs changed shape) — a behaviour change
+smuggled in as a perf delta — and no amount of runner noise excuses it.
 
 Exit codes: 0 ok, 1 regression/missing case, 2 missing input file.
 """
@@ -56,11 +57,20 @@ def collect(bench: dict) -> dict:
 
 def collect_lemma_fires(bench: dict) -> dict:
     """{"section/case": lemma_fires} wherever the artifact records it."""
+    return _collect_exact(bench, "lemma_fires")
+
+
+def collect_explain_steps(bench: dict) -> dict:
+    """{"section/case": explain_steps} wherever the artifact records it."""
+    return _collect_exact(bench, "explain_steps")
+
+
+def _collect_exact(bench: dict, field: str) -> dict:
     out = {}
     for sec in SECTION_METRICS:
         for case, rec in bench.get(sec, {}).items():
-            if isinstance(rec, dict) and "lemma_fires" in rec:
-                out[f"{sec}/{case}"] = int(rec["lemma_fires"])
+            if isinstance(rec, dict) and field in rec:
+                out[f"{sec}/{case}"] = int(rec[field])
     return out
 
 
@@ -122,22 +132,31 @@ def main(argv=None) -> int:
               f"({fresh[case]:.2f} ms) — not gated until `make bench` "
               f"refreshes the baseline")
 
-    # determinism gate: exact lemma_fires equality, no tolerance — only
-    # for cases recording the count in BOTH artifacts, so older baselines
-    # phase in as `make bench` refreshes them
+    # determinism gates: exact equality, no tolerance — only for cases
+    # recording the count in BOTH artifacts, so older baselines phase in
+    # as `make bench` refreshes them.  lemma_fires catches the engine
+    # doing different work; explain_steps catches the reconstructed
+    # proofs changing shape (chain canonicalization is deterministic).
     with open(args.baseline) as f:
-        base_fires = collect_lemma_fires(json.load(f))
+        base_full = json.load(f)
     with open(args.fresh) as f:
-        fresh_fires = collect_lemma_fires(json.load(f))
-    for case in sorted(set(base_fires) & set(fresh_fires)):
-        if base_fires[case] != fresh_fires[case]:
-            failures.append(
-                f"{case}: lemma_fires {fresh_fires[case]} vs baseline "
-                f"{base_fires[case]} — saturation is deterministic, the "
-                f"engine's behaviour changed")
-        else:
-            print(f"[bench-gate] {case:28s} "
-                  f"lemma_fires={base_fires[case]} deterministic ok")
+        fresh_full = json.load(f)
+    for field, collector, why in (
+            ("lemma_fires", collect_lemma_fires,
+             "saturation is deterministic, the engine's behaviour changed"),
+            ("explain_steps", collect_explain_steps,
+             "chain reconstruction is deterministic, the proofs changed "
+             "shape")):
+        base_n = collector(base_full)
+        fresh_n = collector(fresh_full)
+        for case in sorted(set(base_n) & set(fresh_n)):
+            if base_n[case] != fresh_n[case]:
+                failures.append(
+                    f"{case}: {field} {fresh_n[case]} vs baseline "
+                    f"{base_n[case]} — {why}")
+            else:
+                print(f"[bench-gate] {case:28s} "
+                      f"{field}={base_n[case]} deterministic ok")
 
     if failures:
         print(f"[bench-gate] FAIL: {len(failures)} hot-path regression(s):",

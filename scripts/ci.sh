@@ -82,11 +82,16 @@ case "$target" in
                  --trace /tmp/graphguard_trace.json --metrics
                PYTHONPATH=src python -m repro.obs report \
                  /tmp/graphguard_trace.json | grep "top lemma: " ;;
+  # proof-provenance gate: clean certificates explain + replay outside
+  # the e-graph; injected smoke bugs produce failure-frontier narratives
+  # naming the stuck op; explain-off runs stay byte-identical
+  explain-smoke)
+               PYTHONPATH=src python scripts/explain_smoke.py ;;
   # docs gates: lemma catalog completeness, CLI --help drift, docstring
   # coverage over repro.core + repro.api + repro.obs (no external linters)
   docs-check)  python scripts/check_cli_docs.py
                python scripts/check_docstrings.py
                PYTHONPATH=src python -m pytest -x -q tests/test_docs.py ;;
-  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|servecheck-smoke|chaos-smoke|cache-smoke|fn-smoke|obs-smoke|docs-check)" >&2
+  *) echo "unknown target: $target (verify|quick|bench-smoke|bench-gate|bug-suite|suite|golden|modelcheck-smoke|gradcheck-smoke|servecheck-smoke|chaos-smoke|cache-smoke|fn-smoke|obs-smoke|explain-smoke|docs-check)" >&2
      exit 2 ;;
 esac

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Proof-provenance gate (``make explain-smoke``).
+
+Three legs, mirroring the claims docs/EXPLANATIONS.md makes:
+
+1. **Clean certificates explain and replay.**  Every single-layer case
+   in a representative set, one whole-model run, one train strategy and
+   one serve strategy are verified with provenance recording on; every
+   resulting certificate explanation must pass the independent replay
+   checker (:func:`repro.core.explain.check_explanation`) — the lemma
+   chain is re-applied numerically on seeded inputs *outside* the
+   e-graph.
+2. **Injected bugs produce a failure-frontier narrative.**  Each smoke
+   bug (``wrong_spec``, ``accum_no_rescale``, ``stale_cache_shard``)
+   must yield a frontier that names the stuck operator, and the
+   narrative must mention the lemma frontier (fired-but-did-not-close or
+   the explicit no-lemma line).
+3. **Explanations are free when off.**  A run with ``explain`` off must
+   produce byte-identical certificates (R_o + deterministic stats) to
+   the explain-on run, and its report JSON must carry no ``explanation``
+   key.
+
+Exit codes: 0 all legs pass, 1 any leg fails.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+FAILURES = []
+
+
+def _check(ok: bool, what: str) -> None:
+    status = "ok" if ok else "FAIL"
+    print(f"[explain-smoke] {what}: {status}")
+    if not ok:
+        FAILURES.append(what)
+
+
+def _deterministic_stats(stats: dict) -> dict:
+    """The stats keys that are byte-stable across runs (no timings)."""
+    return {k: stats[k] for k in ("egraph_nodes", "gs_ops", "gd_ops",
+                                  "lemma_fires") if k in stats}
+
+
+def leg_clean_replay() -> None:
+    """Leg 1: clean certificates explain, and every chain replays."""
+    from repro.api import verify
+    from repro.core.explain import check_explanation, explanation_steps
+    from repro.gradcheck import check_train
+    from repro.modelcheck import check_model
+    from repro.servecheck import check_serve
+
+    for case in ("tp_layer", "fsdp_mlp", "sp_moe", "tp_dp_2d"):
+        rep = verify(case, engine_opts={"explain": True})
+        _check(rep.verdict == "certificate" and rep.explanation is not None,
+               f"case {case}: certificate with explanation")
+        res = check_explanation(rep.explanation)
+        _check(res["ok"], f"case {case}: replay "
+               f"({res['checked_steps']} step(s)"
+               + (f"; {res['failures'][:1]}" if res["failures"] else "")
+               + ")")
+
+    def nested(reports):
+        for key in sorted(reports):
+            expl = reports[key].get("explanation")
+            if expl and expl.get("kind") == "certificate":
+                yield key, expl
+
+    m = check_model("gpt", "dp2xtp2", workers=0,
+                    engine_opts={"explain": True})
+    _check(m.verdict == "certificate", "model gpt@dp2xtp2: certificate")
+    for key, expl in nested(m.reports):
+        res = check_explanation(expl)
+        _check(res["ok"], f"model obligation {key}: replay "
+               f"({explanation_steps(expl)} step(s))")
+
+    t = check_train("dp_accum", engine_opts={"explain": True})
+    _check(t.verdict == "certificate", "train dp_accum: certificate")
+    for key, expl in nested(t.reports):
+        _check(check_explanation(expl)["ok"], f"train param {key}: replay")
+
+    s = check_serve("tp_decode", engine_opts={"explain": True})
+    _check(s.verdict == "certificate", "serve tp_decode: certificate")
+    for key, expl in nested(s.reports):
+        _check(check_explanation(expl)["ok"],
+               f"serve obligation {key}: replay")
+
+
+def leg_bug_frontier() -> None:
+    """Leg 2: every smoke bug yields a failure-frontier narrative naming
+    the stuck op and the lemma frontier."""
+    from repro.gradcheck import check_train
+    from repro.modelcheck import check_model
+    from repro.servecheck import check_serve
+
+    def frontier_of(reports):
+        for rep in reports.values():
+            expl = rep.get("explanation")
+            if expl and expl.get("kind") == "failure_frontier":
+                return expl
+        return None
+
+    runs = [
+        ("model wrong_spec",
+         lambda: check_model("gpt", "dp2xtp2", bug="wrong_spec",
+                             bug_layer=3, workers=0,
+                             engine_opts={"explain": True})),
+        ("train accum_no_rescale",
+         lambda: check_train("dp_accum", bug="accum_no_rescale",
+                             engine_opts={"explain": True})),
+        ("serve stale_cache_shard",
+         lambda: check_serve("tp_decode", bug="stale_cache_shard",
+                             engine_opts={"explain": True})),
+    ]
+    for name, run in runs:
+        rep = run()
+        _check(rep.ok, f"bug {name}: detected and localized")
+        expl = frontier_of(rep.reports)
+        _check(expl is not None, f"bug {name}: failure frontier present")
+        if expl is None:
+            continue
+        stuck = expl.get("stuck_op") or {}
+        _check(bool(stuck.get("op_name")),
+               f"bug {name}: frontier names stuck op "
+               f"`{stuck.get('op_name')}` (#{stuck.get('op_index')})")
+        narrative = "\n".join(expl.get("narrative") or ())
+        _check("stuck at" in narrative and "lemma" in narrative,
+               f"bug {name}: narrative mentions stuck op + lemma frontier")
+
+
+def leg_off_identical() -> None:
+    """Leg 3: explain-off certificates are byte-identical and carry no
+    explanation key."""
+    from repro.api import verify
+
+    for case in ("tp_layer", "sp_moe"):
+        off = verify(case)
+        on = verify(case, engine_opts={"explain": True})
+        _check("explanation" not in off.to_json(),
+               f"case {case}: off-report has no explanation key")
+        _check(off.r_o == on.r_o
+               and _deterministic_stats(off.stats)
+               == _deterministic_stats(on.stats),
+               f"case {case}: off/on certificates byte-identical")
+        _check(json.dumps(on.explanation, sort_keys=True)
+               == json.dumps(verify(
+                   case, engine_opts={"explain": True}).explanation,
+                   sort_keys=True),
+               f"case {case}: explanation deterministic across runs")
+
+
+def main() -> int:
+    leg_clean_replay()
+    leg_bug_frontier()
+    leg_off_identical()
+    if FAILURES:
+        print(f"[explain-smoke] FAIL: {len(FAILURES)} check(s) failed",
+              file=sys.stderr)
+        return 1
+    print("[explain-smoke] all legs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -108,7 +108,8 @@ def run_functions(fn_seq: Callable, fn_dist: Callable, mesh,
                                     list(spec.in_specs), list(spec.avals),
                                     list(spec.input_names), strict=strict)
         gd, r_i = expand_spmd(cap)
-        return check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+        return check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes,
+                                explain=eo.explain)
 
 
 def verify_functions(fn_seq: Callable, fn_dist: Callable, mesh,
@@ -141,6 +142,7 @@ def verify_functions(fn_seq: Callable, fn_dist: Callable, mesh,
             case=spec.name, degree=spec.degree, bug=None,
             verdict="refinement_error", expected="certificate", ok=False,
             localization=e.payload(),
+            explanation=getattr(e, "explanation", None),
             wall_s=round(time.perf_counter() - t0, 6))
     except Exception as e:  # noqa: BLE001 — capture/engine failure -> verdict
         return Report(
@@ -153,4 +155,5 @@ def verify_functions(fn_seq: Callable, fn_dist: Callable, mesh,
         case=spec.name, degree=spec.degree, bug=None,
         verdict="certificate", expected="certificate", ok=True,
         r_o=cert_json["r_o"], stats=cert_json["stats"], certificate=cert,
+        explanation=cert.explanation,
         wall_s=round(time.perf_counter() - t0, 6))

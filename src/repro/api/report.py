@@ -42,6 +42,12 @@ class Report:
                                                 # (cache hit, retries,
                                                 # degraded_reason) — never
                                                 # part of stable_summary
+    explanation: Optional[Dict[str, Any]] = None  # proof provenance
+                                                # (``--explain`` only): lemma
+                                                # chain or failure frontier;
+                                                # omitted from to_json when
+                                                # absent and never part of
+                                                # stable_summary
     certificate: Any = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
@@ -56,6 +62,9 @@ class Report:
         """JSON-safe dict (drops the live certificate object)."""
         out = {f.name: getattr(self, f.name) for f in fields(self)
                if f.name != "certificate"}
+        if out.get("explanation") is None:
+            # keep explain-off payloads byte-identical to pre-provenance ones
+            out.pop("explanation")
         return out
 
     @classmethod

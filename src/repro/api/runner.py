@@ -12,6 +12,9 @@ state afterwards:
     optimizations   None (leave the process setting), bool (all flags), or
                     a {flag: bool} dict of ``repro.core.profile.OptConfig``
                     overrides — restored after the call either way
+    explain         record proof provenance (lemma chains / failure
+                    frontiers, see ``repro.core.explain``); None defers to
+                    the ``GRAPHGUARD_EXPLAIN`` environment default
 
 ``run_spec()`` is the raising flavour (returns the live ``Certificate`` or
 raises ``RefinementError``/``CaptureError``) used by the back-compat CLI
@@ -54,6 +57,7 @@ class _engine_opts:
         opts = dict(opts or {})
         self.max_nodes = opts.pop("max_nodes", DEFAULT_MAX_NODES)
         self.optimizations = opts.pop("optimizations", None)
+        self.explain = opts.pop("explain", None)
         if opts:
             raise ValueError(f"unknown engine_opts: {sorted(opts)}")
         if isinstance(self.optimizations, dict):
@@ -97,7 +101,8 @@ def run_spec(spec: StrategySpec, *, engine_opts: Optional[dict] = None
                                list(spec.input_names))
             gd, r_i = expand_spmd(cap)
         with obs_trace.span("infer", cat="engine", case=spec.name):
-            return check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+            return check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes,
+                                    explain=eo.explain)
 
 
 def verify(spec_or_name: Union[str, StrategySpec], *,
@@ -123,6 +128,7 @@ def verify(spec_or_name: Union[str, StrategySpec], *,
             case=spec.name, degree=spec.degree, bug=spec.bug,
             verdict=verdict, expected=spec.expected,
             ok=spec.expected_verdict == verdict, localization=payload,
+            explanation=getattr(e, "explanation", None),
             wall_s=round(time.perf_counter() - t0, 6))
     except Exception as e:  # noqa: BLE001 — CaptureError/engine -> verdict
         return Report(
@@ -136,4 +142,5 @@ def verify(spec_or_name: Union[str, StrategySpec], *,
         verdict="certificate", expected=spec.expected,
         ok=spec.expected_verdict == "certificate",
         r_o=cert_json["r_o"], stats=cert_json["stats"], certificate=cert,
+        explanation=cert.explanation,
         wall_s=round(time.perf_counter() - t0, 6))

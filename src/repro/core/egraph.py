@@ -71,6 +71,15 @@ class ENode:
         return f"ENode({self.op}, {self.attrs}, {self.children})"
 
 
+def _node_key(n: ENode) -> tuple:
+    """Structural sort key for ENodes.  Member sets are Python sets, so
+    their iteration order follows hash randomization; everything that
+    *iterates* members (``nodes_of``, merge's pending re-queue) sorts by
+    this key first, keeping lemma dispatch — and therefore the proof
+    journal — identical across processes and PYTHONHASHSEED values."""
+    return (n.op, n.children, repr(n.attrs))
+
+
 class EClassInfo:
     """Per-e-class bookkeeping: member nodes, parent back-edges, the class
     shape/dtype invariant, known tensor leaves, and the GraphGuard T_rel
@@ -93,13 +102,24 @@ class EGraph:
     hashcons + per-class info, with op-indexed lemma dispatch, deferred
     rebuilds, and a node budget (``EGraphLimit`` past ``max_nodes``)."""
 
-    def __init__(self, max_nodes: int = 200_000):
+    def __init__(self, max_nodes: int = 200_000, explain: bool = False):
         self.uf: list[int] = []
         self.classes: dict[int, EClassInfo] = {}
         self.hashcons: dict[ENode, int] = {}
         self.worklist: list[int] = []
         self.pending: list[tuple[ENode, int]] = []  # (node, class) for lemma queue
         self.max_nodes = max_nodes
+        # --- proof provenance (egg-style explanations) -------------------
+        # With ``explain`` on, every union is journaled as an edge between
+        # its two pre-union roots plus the justification that caused it, and
+        # every class id keeps its creating e-node + shape/dtype.  The edge
+        # graph has exactly one edge per union, so two ids are uf-equal iff
+        # an edge path connects them — ``repro.core.explain`` walks those
+        # paths to rebuild lemma chains.  Off (the default), no extra state
+        # is kept and behaviour is byte-identical.
+        self.explain = bool(explain)
+        self.explain_edges: list[tuple[int, int, Optional[tuple]]] = []
+        self.node_meta: dict[int, tuple[ENode, tuple, str]] = {}
         self.n_nodes = 0
         self.version = 0  # bumped on every union; cheap fixpoint detection
         self.profile = None  # optional repro.core.profile.Profile
@@ -156,6 +176,8 @@ class EGraph:
         if self.n_nodes >= self.max_nodes:
             raise EGraphLimit(f"egraph node limit {self.max_nodes} exceeded")
         cid = self._new_class(shape, dtype)
+        if self.explain:
+            self.node_meta[cid] = (node, shape, dtype)
         info = self.classes[cid]
         info.nodes.add(node)
         if node.op == "tensor":
@@ -168,7 +190,7 @@ class EGraph:
         return cid
 
     # -- merging -------------------------------------------------------------
-    def merge(self, a: int, b: int) -> int:
+    def merge(self, a: int, b: int, reason: Optional[tuple] = None) -> int:
         a, b = self.find(a), self.find(b)
         if a == b:
             return a
@@ -176,6 +198,10 @@ class EGraph:
         if ia.shape != ib.shape and ia.shape != () and ib.shape != ():
             raise EGraphShapeError(
                 f"merging classes with shapes {ia.shape} vs {ib.shape}")
+        if self.explain:
+            # journal with the pre-union roots: each union joins exactly two
+            # edge-graph components, keeping connectivity ⟺ uf-equality
+            self.explain_edges.append((a, b, reason))
         # keep the class with more parents as the root (union by size-ish)
         if len(ia.parents) < len(ib.parents):
             a, b = b, a
@@ -193,7 +219,7 @@ class EGraph:
         # members (constrained lemmas scan sibling reps) of the merged class.
         for pnode, pcid in ia.parents:
             self.pending.append((pnode, pcid))
-        for n in ib.nodes:
+        for n in sorted(ib.nodes, key=_node_key):
             self.pending.append((n, a))
         self.version += 1
         nc = self._nodes_cache
@@ -212,7 +238,7 @@ class EGraph:
         prof = self.profile
         t0 = time.perf_counter() if prof is not None else 0.0
         while self.worklist:
-            todo = {self.find(c) for c in self.worklist}
+            todo = sorted({self.find(c) for c in self.worklist})
             self.worklist.clear()
             for cid in todo:
                 self._repair(cid)
@@ -235,11 +261,14 @@ class EGraph:
             canon = pnode.canonical(self.find)
             pcid = self.find(pcid)
             if canon in new_parents:
-                self.merge(pcid, new_parents[canon])
+                self.merge(pcid, new_parents[canon],
+                           ("congruence", canon.op) if self.explain else None)
                 pcid = self.find(pcid)
             else:
                 if stale is None and canon in self.hashcons:
-                    self.merge(pcid, self.hashcons[canon])
+                    self.merge(pcid, self.hashcons[canon],
+                               ("congruence", canon.op) if self.explain
+                               else None)
                     pcid = self.find(pcid)
             new_parents[canon] = pcid
             self.hashcons[canon] = pcid
@@ -273,6 +302,11 @@ class EGraph:
                 continue
             seen.add(cn)
             canon.append(cn)
+        # structural order, not set-iteration order: lemma matching walks
+        # these lists, and hash-randomized order would make the proof
+        # journal differ between processes (see _node_key)
+        canon.sort(key=_node_key)
+        for cn in canon:
             by_op.setdefault(cn.op, []).append(cn)
         if cached:
             self._nodes_cache[r] = (by_op, canon)
@@ -381,7 +415,9 @@ class EGraph:
                         la = lhs if isinstance(lhs, int) else self.add_term(lhs)
                         ra = rhs if isinstance(rhs, int) else self.add_term(rhs)
                         if self.find(la) != self.find(ra):
-                            self.merge(la, ra)
+                            self.merge(la, ra,
+                                       ("lemma", lem.name) if self.explain
+                                       else None)
                             grew = True
                 if not deferred:
                     self.rebuild()

@@ -42,8 +42,9 @@ from ..obs import trace as obs_trace
 from ..obs.metrics import REGISTRY
 from .capture import Graph
 from .egraph import EGraph, EGraphLimit
+from .explain import build_certificate_explanation, build_failure_frontier
 from .lemmas import all_lemmas
-from .profile import CONFIG, Profile
+from .profile import CONFIG, Profile, explain_enabled
 from .terms import Term, eval_term, pretty
 
 
@@ -58,6 +59,10 @@ class Certificate:
     r_o: dict                      # G_s output name -> clean Term over G_d
     relation: dict                 # all G_s tensors -> clean Term (R)
     stats: dict
+    # proof provenance (``explain=True`` only); deliberately NOT part of
+    # ``to_json`` so certificate payloads stay byte-identical with it off
+    explanation: Optional[dict] = field(default=None, repr=False,
+                                        compare=False)
 
     def reconstruct(self, gd_env: dict) -> dict:
         """Rebuild G_s outputs from G_d tensor values (executable R_o)."""
@@ -88,6 +93,7 @@ class RefinementError(Exception):
         self.out_name = out_name
         self.input_mappings = input_mappings
         self.diagnostic = diagnostic
+        self.explanation = None     # failure frontier (``explain=True`` only)
         lines = [
             f"refinement failed at G_s operator #{op_index} "
             f"`{op_name}` (output `{out_name}`)",
@@ -133,9 +139,11 @@ class GraphGuard:
     r_i: dict                       # G_s input name -> [Terms over G_d inputs]
     max_nodes: int = 400_000
     collect_lemma_stats: bool = True
+    explain: Optional[bool] = None  # None -> GRAPHGUARD_EXPLAIN env default
 
     def __post_init__(self):
-        self.eg = EGraph(max_nodes=self.max_nodes)
+        self.explain = explain_enabled(self.explain)
+        self.eg = EGraph(max_nodes=self.max_nodes, explain=self.explain)
         self.lemmas = all_lemmas()
         self.fire_counts: dict = {}
         self.profile = Profile()
@@ -182,10 +190,12 @@ class GraphGuard:
             self._install_inputs_inner()
 
     def _install_inputs_inner(self):
+        xp = self.explain
         for name, exprs in self.r_i.items():
             c_s = self.eg.add_term(self.gs.tensor(name))
             for e in exprs:
-                self.eg.merge(c_s, self.eg.add_term(e))
+                self.eg.merge(c_s, self.eg.add_term(e),
+                              ("input", name) if xp else None)
                 for leaf in e.leaves():
                     if leaf.op == "tensor":
                         self._mark_name(leaf.name)
@@ -198,7 +208,8 @@ class GraphGuard:
             for dname, dval in self.gd.consts.items():
                 if sval.shape == dval.shape and sval.dtype == dval.dtype \
                         and np.array_equal(sval, dval):
-                    self.eg.merge(c_s, self.eg.add_term(self.gd.tensor(dname)))
+                    self.eg.merge(c_s, self.eg.add_term(self.gd.tensor(dname)),
+                                  ("const", sname) if xp else None)
                     self._mark_name(dname)
                     matched += 1
         self.eg.rebuild()
@@ -206,7 +217,8 @@ class GraphGuard:
     # -- frontier (Listing 3) -------------------------------------------------
     def _install_def(self, name: str, term: Term):
         c_out = self.eg.add_term(self.gd.tensor(name))
-        self.eg.merge(c_out, self.eg.add_term(term))
+        self.eg.merge(c_out, self.eg.add_term(term),
+                      ("dist_def", name) if self.explain else None)
         for l in term.leaves():
             if l.op == "tensor":
                 self._mark_name(l.name)
@@ -284,8 +296,12 @@ class GraphGuard:
         for i, (out_name, term) in enumerate(self.gs.defs):
             with obs_trace.span(f"op:{out_name}", cat="engine",
                                 op=term.op, index=i):
+                # fire counts at op start: the delta on failure is the
+                # fired-but-did-not-close set for the failure frontier
+                fires_at_op = dict(self.fire_counts) if self.explain else None
                 c_out = self.eg.add_term(self.gs.tensor(out_name))
-                self.eg.merge(c_out, self.eg.add_term(term))
+                self.eg.merge(c_out, self.eg.add_term(term),
+                              ("seq_def", out_name) if self.explain else None)
                 self.eg.rebuild()
                 # saturate + frontier to fixpoint (Listing 3 loop);
                 # extraction is the expensive step, so frontier growth is
@@ -312,7 +328,14 @@ class GraphGuard:
                     for leaf in term.leaves():
                         if leaf.op == "tensor" and leaf.name in self.relation:
                             in_maps[leaf.name] = self.relation[leaf.name]
-                    raise RefinementError(i, term.op, out_name, in_maps, diag)
+                    err = RefinementError(i, term.op, out_name, in_maps, diag)
+                    if self.explain:
+                        fired = {k: self.fire_counts.get(k, 0)
+                                 - fires_at_op.get(k, 0)
+                                 for k in self.fire_counts}
+                        err.explanation = build_failure_frontier(
+                            self, i, term.op, out_name, in_maps, diag, fired)
+                    raise err
                 self.relation[out_name] = ce
                 self._mark_related(ce)
 
@@ -329,11 +352,17 @@ class GraphGuard:
             ce = self._extract(c, out_ok)
             if ce is None:
                 diag = self.eg.extract_any(self.eg.find(c), out_ok)
-                raise RefinementError(
+                err = RefinementError(
                     len(self.gs.defs), "output-filter", o,
                     {o: self.relation.get(o)}, diag,
                     message="output maps to internal G_d tensors but not to "
                             "G_d outputs (Listing 1 line 9 filter)")
+                if self.explain:
+                    maps = {o: self.relation[o]} if o in self.relation else {}
+                    err.explanation = build_failure_frontier(
+                        self, len(self.gs.defs), "output-filter", o,
+                        maps, diag, {})
+                raise err
             r_o[o] = ce
         stats = {
             "time_s": time.perf_counter() - t0,
@@ -352,12 +381,25 @@ class GraphGuard:
             sum(self.fire_counts.values()))
         REGISTRY.histogram("engine.infer_s").observe(stats["time_s"])
         REGISTRY.histogram("engine.egraph_nodes").observe(self.eg.n_nodes)
-        return Certificate(r_o, dict(self.relation), stats)
+        cert = Certificate(r_o, dict(self.relation), stats)
+        if self.explain:
+            # built after the stats snapshot so every stats field (and the
+            # certificate payload) is byte-identical with explanations off
+            with obs_trace.span("explain.build", cat="engine"):
+                cert.explanation = build_certificate_explanation(self, r_o)
+            REGISTRY.counter("engine.explain_steps").inc(
+                cert.explanation["total_steps"])
+            obs_trace.event("explain", cat="engine", outputs=len(r_o),
+                            steps=cert.explanation["total_steps"])
+        return cert
 
 
 def check_refinement(gs: Graph, gd: Graph, r_i: dict,
-                     max_nodes: int = 400_000) -> Certificate:
+                     max_nodes: int = 400_000,
+                     explain: Optional[bool] = None) -> Certificate:
     """One-shot refinement check: does ``gd`` (multi-rank) refine ``gs``
     given input relation ``r_i``?  Returns a :class:`Certificate` or raises
-    :class:`RefinementError` with the first unresolvable operator."""
-    return GraphGuard(gs, gd, r_i, max_nodes=max_nodes).run()
+    :class:`RefinementError` with the first unresolvable operator.
+    ``explain=True`` additionally records proof provenance (see
+    ``repro.core.explain``); None defers to ``GRAPHGUARD_EXPLAIN``."""
+    return GraphGuard(gs, gd, r_i, max_nodes=max_nodes, explain=explain).run()

@@ -66,6 +66,16 @@ def set_optimizations(enabled: bool, **overrides) -> None:
         setattr(CONFIG, f.name, overrides.get(f.name, enabled))
 
 
+def explain_enabled(override=None) -> bool:
+    """Resolve the proof-provenance toggle: an explicit ``explain=`` engine
+    option wins; otherwise ``GRAPHGUARD_EXPLAIN`` is the ambient default
+    (inherited by spawn pool workers through the environment)."""
+    if override is not None:
+        return bool(override)
+    return os.environ.get("GRAPHGUARD_EXPLAIN", "0").lower() \
+        not in ("0", "off", "false", "no", "")
+
+
 class Profile:
     """Accumulating per-phase timers and counters (all costs are adds)."""
 

@@ -57,6 +57,10 @@ class TrainReport:
                                          # (queue-wait vs on-worker wall)
                                          # — timing-class data, never in
                                          # stable_summary
+    explanation: Optional[dict] = None   # proof-provenance roll-up
+                                         # (``--explain`` only); omitted
+                                         # from to_json when absent, never
+                                         # in stable_summary
     schema_version: int = TRAIN_REPORT_SCHEMA
 
     def __post_init__(self):
@@ -73,6 +77,8 @@ class TrainReport:
     def to_json(self) -> dict:
         out = {f.name: getattr(self, f.name) for f in fields(self)
                if f.name != "params"}
+        if out.get("explanation") is None:
+            out.pop("explanation")
         out["params"] = [p.to_json() for p in self.params]
         out["timing"] = self.timing()
         return out

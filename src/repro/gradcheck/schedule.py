@@ -21,6 +21,7 @@ from ..api.runner import _engine_opts
 from ..api.spec import Degree, StrategySpec, task_id
 from ..core import RefinementError, check_refinement, expand_spmd
 from ..core.capture import capture
+from ..core.explain import aggregate_explanations
 from ..core.terms import pretty
 from ..runtime import (RuntimeTask, pool_stats, resolve_cache, run_tasks,
                        strategy_cache_key)
@@ -62,12 +63,14 @@ def _verify_param(spec: StrategySpec, param: str,
                                     spec.in_specs, spec.avals,
                                     spec.input_names)
             gd, r_i = expand_spmd(cap)
-            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes,
+                                    explain=eo.explain)
     except RefinementError as e:
         d = Report(
             case=spec.name, degree=spec.degree, bug=spec.bug,
             verdict="refinement_error", expected=spec.expected,
             ok=spec.expected == "refinement_error", localization=e.payload(),
+            explanation=getattr(e, "explanation", None),
             wall_s=round(time.perf_counter() - t0, 6)).to_json()
         d["collective"] = coll
         return d
@@ -98,6 +101,7 @@ def _verify_param(spec: StrategySpec, param: str,
         verdict="certificate", expected=spec.expected,
         ok=spec.expected == "certificate" and relation_ok,
         r_o=cert_json["r_o"], stats=cert_json["stats"],
+        explanation=cert.explanation,
         wall_s=round(time.perf_counter() - t0, 6)).to_json()
     d["collective"] = coll
     d["relation"] = {
@@ -248,4 +252,5 @@ def check_train(strategy: str, *, degree: Optional[Degree] = None,
         params=params, reports=dict(reports), failing_params=failing,
         bug=bug, bug_param=bug_param,
         wall_s=round(time.perf_counter() - t0, 6), workers=used,
-        cache=cache_stats, pool=pstats)
+        cache=cache_stats, pool=pstats,
+        explanation=aggregate_explanations(reports))

@@ -70,8 +70,8 @@ from ..core import RefinementError
 from ..dist.strategies import STRATEGY_CASES as CASES  # legacy view re-export
 
 # the --json envelope: {"schema_version", "kind", "timing", "report"}
-# (+ an opt-in "metrics" key — only when --metrics is passed, so default
-# envelopes keep their pinned four-key shape)
+# (+ opt-in "metrics"/"explanation" keys — only when --metrics/--explain
+# are passed, so default envelopes keep their pinned four-key shape)
 JSON_SCHEMA_VERSION = 2
 
 
@@ -139,7 +139,7 @@ def _print_registry():
 
 
 def _json_envelope(kind: str, report_json: dict, timing: dict,
-                   metrics=None) -> str:
+                   metrics=None, explain: bool = False) -> str:
     env = {
         "schema_version": JSON_SCHEMA_VERSION,
         "kind": kind,
@@ -148,6 +148,11 @@ def _json_envelope(kind: str, report_json: dict, timing: dict,
     }
     if metrics is not None:
         env["metrics"] = metrics
+    if explain:
+        # hoist the proof provenance to the envelope level (best-effort:
+        # None when the engine produced no explanation, e.g. on a harness
+        # error before inference started)
+        env["explanation"] = report_json.pop("explanation", None)
     return json.dumps(env, indent=2, sort_keys=True)
 
 
@@ -157,6 +162,24 @@ def _metrics_snapshot(args):
         return None
     from ..obs.metrics import REGISTRY
     return REGISTRY.snapshot()
+
+
+def _cli_engine_opts(args):
+    """Engine options the CLI flags map onto — None when defaulted."""
+    if getattr(args, "explain", False):
+        return {"explain": True}
+    return None
+
+
+def _print_narrative(expl) -> None:
+    """Render an explanation (any kind) to stdout under --explain."""
+    from ..core.explain import render_narrative
+    if not expl:
+        print("[explain] no explanation available for this run")
+        return
+    print("[explain] proof provenance:")
+    for line in render_narrative(expl):
+        print(f"  {line}")
 
 
 def _case_timing(report) -> dict:
@@ -174,6 +197,7 @@ def _run_model(args, cache) -> int:
     try:
         report = check_model(args.model, args.plan, bug=args.inject_bug,
                              bug_layer=args.bug_layer, workers=args.workers,
+                             engine_opts=_cli_engine_opts(args),
                              timeout_s=args.timeout or DEFAULT_TIMEOUT_S,
                              cache=cache)
     except (ModelCheckError, ValueError) as e:
@@ -181,9 +205,12 @@ def _run_model(args, cache) -> int:
         return 2
     if args.json:
         print(_json_envelope("model", report.to_json(), report.timing(),
-                             metrics=_metrics_snapshot(args)))
+                             metrics=_metrics_snapshot(args),
+                             explain=args.explain))
     else:
         print(report.to_markdown())
+        if args.explain:
+            _print_narrative(report.explanation)
         if report.verdict == "certificate":
             print("WHOLE-MODEL REFINEMENT HOLDS "
                   f"({report.unique_obligations} obligations verified for "
@@ -212,6 +239,7 @@ def _run_train(args, cache) -> int:
     try:
         report = check_train(args.train, degree=args.degree,
                              bug=args.inject_bug, workers=args.workers,
+                             engine_opts=_cli_engine_opts(args),
                              timeout_s=args.timeout or DEFAULT_TIMEOUT_S,
                              cache=cache)
     except (KeyError, ValueError) as e:
@@ -219,9 +247,12 @@ def _run_train(args, cache) -> int:
         return 2
     if args.json:
         print(_json_envelope("train", report.to_json(), report.timing(),
-                             metrics=_metrics_snapshot(args)))
+                             metrics=_metrics_snapshot(args),
+                             explain=args.explain))
     else:
         print(report.to_markdown())
+        if args.explain:
+            _print_narrative(report.explanation)
         if report.verdict == "certificate":
             print(f"TRAIN-STEP REFINEMENT HOLDS ({len(report.params)} "
                   f"parameter gradients verified, relations transposed "
@@ -249,6 +280,7 @@ def _run_serve(args, cache) -> int:
     try:
         report = check_serve(args.serve, degree=args.degree,
                              bug=args.inject_bug, workers=args.workers,
+                             engine_opts=_cli_engine_opts(args),
                              timeout_s=args.timeout or DEFAULT_TIMEOUT_S,
                              cache=cache)
     except (KeyError, ValueError) as e:
@@ -256,9 +288,12 @@ def _run_serve(args, cache) -> int:
         return 2
     if args.json:
         print(_json_envelope("serve", report.to_json(), report.timing(),
-                             metrics=_metrics_snapshot(args)))
+                             metrics=_metrics_snapshot(args),
+                             explain=args.explain))
     else:
         print(report.to_markdown())
+        if args.explain:
+            _print_narrative(report.explanation)
         if report.verdict == "certificate":
             print(f"SERVING-PATH REFINEMENT HOLDS ({report.total_steps} "
                   f"serving blocks proved by {report.unique_obligations} "
@@ -359,18 +394,24 @@ def _run_fn(args) -> int:
         print(f"[fn] {e}", file=sys.stderr)
         return 2
     engine_opts = {"max_nodes": 400_000}
+    engine_opts.update(_cli_engine_opts(args) or {})
     report = verify_functions(engine_opts=engine_opts, **kw)
     if args.json:
         print(_json_envelope("fn", report.to_json(), _case_timing(report),
-                             metrics=_metrics_snapshot(args)))
+                             metrics=_metrics_snapshot(args),
+                             explain=args.explain))
     elif report.verdict == "certificate":
         for k, v in (report.r_o or {}).items():
             print(f"  {k} = {v}")
         print(f"REFINEMENT HOLDS — `{report.case}` refines its sequential "
               f"spec (certificate above)")
+        if args.explain:
+            _print_narrative(report.explanation)
     elif report.verdict == "refinement_error":
         print(f"REFINEMENT FAILED — `{report.case}` bug localized:")
         print(json.dumps(report.localization, indent=2, sort_keys=True))
+        if args.explain:
+            _print_narrative(report.explanation)
     else:
         print(f"VERDICT: {report.verdict} — {report.error}")
     if report.verdict == "certificate":
@@ -385,11 +426,12 @@ def _case_report(args, cache) -> dict:
     from ..api.suite import _run_task
     from ..runtime import (RuntimeTask, SupervisedPool, execute_inline,
                            strategy_cache_key)
+    eo = _cli_engine_opts(args)
     key = task_id(args.case, args.degree, args.bug)
     cache_key = None if cache is None else strategy_cache_key(
-        build_spec(args.case, degree=args.degree, bug=args.bug))
+        build_spec(args.case, degree=args.degree, bug=args.bug), eo)
     rt = RuntimeTask(key=key, fn=_run_task,
-                     args=((args.case, args.degree, args.bug), None),
+                     args=((args.case, args.degree, args.bug), eo),
                      budget_s=args.timeout or 120.0, cache_key=cache_key)
     if args.timeout is not None:
         # budget enforcement needs a supervisor outside the task — one
@@ -478,10 +520,18 @@ def main(argv=None):
     ap.add_argument("--json", action="store_true",
                     help="emit the structured report as JSON (with "
                          "schema_version + per-phase timing)")
+    ap.add_argument("--explain", action="store_true",
+                    help="record proof provenance and emit the lemma-chain "
+                         "explanation: the equality chain proving each "
+                         "certificate (replayable outside the e-graph), or "
+                         "the failure frontier around the stuck op for "
+                         "refinement errors; adds an `explanation` key to "
+                         "the --json envelope (see docs/EXPLANATIONS.md)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record engine/pool/cache spans into a Chrome/"
-                         "Perfetto trace JSON at PATH (plus PATH.jsonl); "
-                         "inspect with `python -m repro.obs report PATH`")
+                         "Perfetto trace JSON at PATH (plus PATH.jsonl; "
+                         "a .json.gz PATH gzips both); inspect with "
+                         "`python -m repro.obs report PATH`")
     ap.add_argument("--metrics", action="store_true",
                     help="print the metrics registry to stderr after the "
                          "run (and add a `metrics` key to the --json "
@@ -490,20 +540,34 @@ def main(argv=None):
     if args.list:
         _print_registry()
         return
-    if args.trace is None and not args.metrics:
-        return _dispatch(ap, args)
-    from ..obs import trace as obs_trace
-    from ..obs.metrics import REGISTRY
-    if args.metrics:
-        REGISTRY.reset()                 # per-run numbers, not per-process
-    tracer = obs_trace.start("main")
+    import os
+    prev_explain = os.environ.get("GRAPHGUARD_EXPLAIN")
+    if args.explain:
+        # ambient default so spawn-pool workers (which rebuild engines
+        # from registry names) inherit provenance recording
+        os.environ["GRAPHGUARD_EXPLAIN"] = "1"
     try:
-        return _dispatch(ap, args)
+        if args.trace is None and not args.metrics:
+            return _dispatch(ap, args)
+        from ..obs import trace as obs_trace
+        from ..obs.metrics import REGISTRY
+        if args.metrics:
+            REGISTRY.reset()             # per-run numbers, not per-process
+        tracer = obs_trace.start("main")
+        try:
+            return _dispatch(ap, args)
+        finally:
+            # runs on sys.exit too — bug-detection exit codes (1) still
+            # get their trace/metrics
+            obs_trace.stop()
+            _finish_obs(args, tracer)
     finally:
-        # runs on sys.exit too — bug-detection exit codes (1) still get
-        # their trace/metrics
-        obs_trace.stop()
-        _finish_obs(args, tracer)
+        # in-process callers (tests) must not inherit the ambient flag
+        if args.explain:
+            if prev_explain is None:
+                os.environ.pop("GRAPHGUARD_EXPLAIN", None)
+            else:
+                os.environ["GRAPHGUARD_EXPLAIN"] = prev_explain
 
 
 def _finish_obs(args, tracer) -> None:
@@ -511,8 +575,11 @@ def _finish_obs(args, tracer) -> None:
     stdout stays report/envelope material)."""
     if args.trace is not None:
         tracer.write_chrome(args.trace)
-        tracer.write_jsonl(args.trace + ".jsonl")
-        print(f"[obs] wrote {args.trace} (+ {args.trace}.jsonl) — inspect "
+        # a gzipped trace gets a gzipped jsonl sibling
+        jsonl = args.trace[:-len(".json.gz")] + ".jsonl.gz" \
+            if args.trace.endswith(".json.gz") else args.trace + ".jsonl"
+        tracer.write_jsonl(jsonl)
+        print(f"[obs] wrote {args.trace} (+ {jsonl}) — inspect "
               f"with `python -m repro.obs report {args.trace}`",
               file=sys.stderr)
     if args.metrics:
@@ -594,20 +661,26 @@ def _dispatch(ap, args):
         args.case = "tp_layer"
     if args.degree is None:
         args.degree = 2
-    if args.json or args.timeout is not None or cache is not None:
+    if args.json or args.explain or args.timeout is not None \
+            or cache is not None:
         from ..api import Report
         d = _case_report(args, cache)
         report = Report.from_json(d)
         if args.json:
             print(_json_envelope("case", d, _case_timing(report),
-                                 metrics=_metrics_snapshot(args)))
+                                 metrics=_metrics_snapshot(args),
+                                 explain=args.explain))
         elif report.verdict == "certificate":
             for k, v in (report.r_o or {}).items():
                 print(f"  {k} = {v}")
             print("REFINEMENT HOLDS (certificate above)")
+            if args.explain:
+                _print_narrative(report.explanation)
         elif report.verdict == "refinement_error":
             print("REFINEMENT FAILED — bug localized:")
             print(json.dumps(report.localization, indent=2, sort_keys=True))
+            if args.explain:
+                _print_narrative(report.explanation)
         else:
             print(f"VERDICT: {report.verdict} — {report.error}")
         if report.verdict != "certificate":

@@ -59,6 +59,13 @@ class ModelReport:
                                          # (queue-wait vs on-worker wall)
                                          # — timing-class data, never in
                                          # stable_summary
+    explanation: Optional[dict] = None   # proof-provenance roll-up
+                                         # (``--explain`` only): per-
+                                         # obligation step counts + lemma
+                                         # sets; full chains stay on the
+                                         # nested reports.  Omitted from
+                                         # to_json when absent, never in
+                                         # stable_summary
     schema_version: int = MODEL_REPORT_SCHEMA
 
     def __post_init__(self):
@@ -70,6 +77,8 @@ class ModelReport:
     def to_json(self) -> dict:
         out = {f.name: getattr(self, f.name) for f in fields(self)
                if f.name != "blocks"}
+        if out.get("explanation") is None:
+            out.pop("explanation")
         out["blocks"] = [b.to_json() for b in self.blocks]
         out["timing"] = self.timing()
         return out

@@ -59,12 +59,14 @@ def _verify_obligation(ob: Obligation, name: str, expected: str,
                                list(spec.in_specs), list(spec.avals),
                                list(spec.input_names))
             gd, r_i = expand_spmd(cap)
-            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes,
+                                    explain=eo.explain)
     except RefinementError as e:
         return Report(
             case=name, degree=spec.degree, bug=spec.bug,
             verdict="refinement_error", expected=expected,
             ok=expected == "refinement_error", localization=e.payload(),
+            explanation=getattr(e, "explanation", None),
             wall_s=round(time.perf_counter() - t0, 6)).to_json()
     except Exception as e:  # noqa: BLE001 — capture/engine failure -> verdict
         return Report(
@@ -97,6 +99,7 @@ def _verify_obligation(ob: Obligation, name: str, expected: str,
         verdict="certificate", expected=expected,
         ok=expected == "certificate" and seams_ok,
         r_o=cert_json["r_o"], stats=cert_json["stats"],
+        explanation=cert.explanation,
         wall_s=round(time.perf_counter() - t0, 6)).to_json()
     d["seams"] = seams
     return d

@@ -15,6 +15,7 @@ import itertools
 from typing import Dict, List
 
 from ..core.capture import Graph, derive_input_relation
+from ..core.explain import aggregate_explanations
 from .decompose import Decomposition
 from .report import BlockResult, ModelReport
 
@@ -89,4 +90,5 @@ def stitch(dec: Decomposition, reports: Dict[str, dict], wall_s: float,
         reports=dict(reports), failing_blocks=failing,
         bug=dec.bug, bug_layer=dec.bug_layer,
         gs_ops_total=gs_ops_total, wall_s=round(wall_s, 6), workers=workers,
-        cache=cache_stats, pool=pool)
+        cache=cache_stats, pool=pool,
+        explanation=aggregate_explanations(reports))

@@ -21,11 +21,15 @@ def main(argv=None) -> int:
                     "--trace PATH`.")
     sub = ap.add_subparsers(dest="cmd", required=True)
     rep = sub.add_parser("report", help="render a trace artifact")
-    rep.add_argument("path", help="trace.json (Chrome) or .jsonl event log")
+    rep.add_argument("path", help="trace.json (Chrome) or .jsonl event log "
+                                  "(either may be gzipped: .gz)")
     rep.add_argument("--top", type=int, default=10,
                      help="rows per ranking section (default 10)")
+    rep.add_argument("--json", action="store_true",
+                     help="emit the report as a JSON object with stable "
+                          "key order instead of text")
     args = ap.parse_args(argv)
-    return report(args.path, top=args.top)
+    return report(args.path, top=args.top, as_json=args.json)
 
 
 if __name__ == "__main__":

@@ -100,6 +100,69 @@ def fault_lines(events: List[dict]) -> List[str]:
     return out
 
 
+def explanation_stats(events: List[dict]) -> Dict[str, float]:
+    """Aggregate proof-provenance work: how many explanations were built
+    (``explain`` instant events from the engine), total chain steps and
+    outputs covered, and the milliseconds spent in ``explain.build``
+    spans.  Empty dict when the run had ``--explain`` off."""
+    stats = {"explanations": 0, "outputs": 0, "steps": 0, "build_ms": 0.0}
+    seen = False
+    for e in events:
+        if e.get("name") == "explain" and e.get("ph") == "i":
+            args = e.get("args") or {}
+            stats["explanations"] += 1
+            stats["outputs"] += int(args.get("outputs", 0))
+            stats["steps"] += int(args.get("steps", 0))
+            seen = True
+        elif e.get("name") == "explain.build" and e.get("ph") == "X":
+            stats["build_ms"] += e.get("dur", 0.0) / 1e3
+            seen = True
+    return stats if seen else {}
+
+
+def to_json_report(events: List[dict], top: int = 10) -> dict:
+    """The machine-readable counterpart of :func:`render` — same
+    aggregations, stable key order (serialize with ``sort_keys=True``)."""
+    lemmas = sorted(lemma_totals(events).items(),
+                    key=lambda kv: (-kv[1]["ms"], -kv[1]["fires"], kv[0]))
+    obligations = []
+    for row in obligation_rows(events)[:top]:
+        r = dict(row)
+        r["pids"] = sorted(p for p in r.get("pids", ()) if p is not None)
+        obligations.append(r)
+    probes = [e for e in events if e.get("name") == "cache.probe"]
+    hits = sum(1 for e in probes
+               if (e.get("args") or {}).get("result") == "hit")
+    dedup = [dict(e.get("args") or {}) for e in events
+             if e.get("name") == "dedup"]
+    faults = [{"name": e["name"],
+               "args": {k: v for k, v in sorted(
+                   (e.get("args") or {}).items()) if k != "depth"}}
+              for e in sorted((e for e in events if e.get("cat") == "fault"),
+                              key=lambda e: e.get("ts", 0.0))]
+    spans = [e for e in events if e.get("ph") == "X"]
+    return {
+        "schema_version": 1,
+        "events": len(events),
+        "spans": len(spans),
+        "processes": len({e.get("pid") for e in events}),
+        "lemmas": {name: {"fires": t["fires"], "ms": round(t["ms"], 3)}
+                   for name, t in lemmas[:top]},
+        "obligations": [{"key": r["key"],
+                         "queue_ms": round(r["queue_ms"], 3),
+                         "run_ms": round(r["run_ms"], 3),
+                         "total_ms": round(r["total_ms"], 3),
+                         "pids": r["pids"]} for r in obligations],
+        "cache": None if not probes else {
+            "probes": len(probes), "hits": hits,
+            "hit_ratio": round(hits / len(probes), 4)},
+        "dedup": dedup,
+        "faults": faults,
+        "explanations": explanation_stats(events) or None,
+        "top_lemma": lemmas[0][0] if lemmas else "-",
+    }
+
+
 def render(events: List[dict], top: int = 10) -> str:
     """The full text report for one trace (see module docstring)."""
     lines: List[str] = []
@@ -139,6 +202,14 @@ def render(events: List[dict], top: int = 10) -> str:
                          f"{a.get('total')} blocks -> {a.get('unique')} "
                          f"obligations")
 
+    xstats = explanation_stats(events)
+    if xstats:
+        lines.append("\n-- explanations --")
+        lines.append(f"  {xstats['explanations']} explanation(s) covering "
+                     f"{xstats['outputs']} output(s), "
+                     f"{xstats['steps']} chain step(s) total, built in "
+                     f"{xstats['build_ms']:.2f} ms")
+
     faults = fault_lines(events)
     if faults:
         lines.append("\n-- faults --")
@@ -149,15 +220,26 @@ def render(events: List[dict], top: int = 10) -> str:
     return "\n".join(lines)
 
 
-def report(path: str, top: int = 10) -> int:
-    """Load ``path`` (trace.json or .jsonl) and print the report.
+def report(path: str, top: int = 10, as_json: bool = False) -> int:
+    """Load ``path`` (trace.json or .jsonl, optionally gzipped) and print
+    the report — text by default, the stable-key JSON object under
+    ``as_json``.
 
     Returns a process exit code: 0 on a readable trace, 1 on an empty
     one (nothing to diagnose usually means the run never started).
     """
+    import json as _json
     events = load_events(path)
     if not events:
-        print(f"{path}: no events")
+        if as_json:
+            print(_json.dumps({"error": "no events", "path": path},
+                              sort_keys=True))
+        else:
+            print(f"{path}: no events")
         return 1
-    print(render(events))
+    if as_json:
+        print(_json.dumps(to_json_report(events, top=top), indent=2,
+                          sort_keys=True))
+    else:
+        print(render(events, top=top))
     return 0

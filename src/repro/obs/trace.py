@@ -174,17 +174,27 @@ class Tracer:
         return {"traceEvents": evs, "displayTimeUnit": "ms"}
 
     def write_chrome(self, path: str) -> None:
-        """Write the Chrome/Perfetto trace JSON to ``path``."""
-        with open(path, "w") as f:
+        """Write the Chrome/Perfetto trace JSON to ``path`` (gzipped when
+        the path ends in ``.gz`` — Perfetto loads those directly)."""
+        with _open_text(path, "wt") as f:
             json.dump(self.chrome_trace(), f)
 
     def write_jsonl(self, path: str) -> None:
-        """Write one event per line (ts-sorted) — the grep-friendly log."""
+        """Write one event per line (ts-sorted) — the grep-friendly log
+        (``zcat``-friendly when the path ends in ``.gz``)."""
         evs = sorted((e for e in self.events if e.get("ph") != "M"),
                      key=lambda e: e.get("ts", 0.0))
-        with open(path, "w") as f:
+        with _open_text(path, "wt") as f:
             for e in evs:
                 f.write(json.dumps(e) + "\n")
+
+
+def _open_text(path: str, mode: str):
+    """Text-mode open that is transparent to a ``.gz`` suffix."""
+    if path.endswith(".gz"):
+        import gzip
+        return gzip.open(path, mode)
+    return open(path, mode.rstrip("t") or "r")
 
 
 # -- module-level dispatch (no-op when no tracer installed) -----------------
@@ -246,9 +256,10 @@ def complete(name: str, start_epoch_s: float, end_epoch_s: float,
 def load_events(path: str) -> List[dict]:
     """Load events from a ``trace.json`` (Chrome object) or ``.jsonl`` log.
 
-    Accepts either export format so ``repro.obs report`` works on both.
+    Accepts either export format (gzipped or not — a ``.gz`` suffix is
+    decompressed transparently) so ``repro.obs report`` works on all.
     """
-    with open(path) as f:
+    with _open_text(path, "rt") as f:
         text = f.read()
     try:
         obj = json.loads(text)

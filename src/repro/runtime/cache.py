@@ -110,9 +110,16 @@ def engine_fingerprint() -> str:
 
 def _engine_token(engine_opts: Optional[dict]) -> str:
     # max_nodes bounds the e-graph and can truncate a proof; optimization
-    # flags are certified byte-identical (tests/test_api.py) and excluded
+    # flags are certified byte-identical (tests/test_api.py) and excluded.
+    # explain changes the report payload (lemma chains attached), so
+    # explain-on runs must not be served explain-off cache entries — the
+    # env-ambient default counts too, not just the explicit option
     from ..api.runner import DEFAULT_MAX_NODES
-    return f"mn{(engine_opts or {}).get('max_nodes', DEFAULT_MAX_NODES)}"
+    from ..core.profile import explain_enabled
+    tok = f"mn{(engine_opts or {}).get('max_nodes', DEFAULT_MAX_NODES)}"
+    if explain_enabled((engine_opts or {}).get("explain")):
+        tok += ":xp"
+    return tok
 
 
 def obligation_cache_key(canonical: str,

@@ -63,6 +63,10 @@ class ServeReport:
                                          # (queue-wait vs on-worker wall)
                                          # — timing-class data, never in
                                          # stable_summary
+    explanation: Optional[dict] = None   # proof-provenance roll-up
+                                         # (``--explain`` only); omitted
+                                         # from to_json when absent, never
+                                         # in stable_summary
     schema_version: int = SERVE_REPORT_SCHEMA
 
     def __post_init__(self):
@@ -79,6 +83,8 @@ class ServeReport:
     def to_json(self) -> dict:
         out = {f.name: getattr(self, f.name) for f in fields(self)
                if f.name != "steps"}
+        if out.get("explanation") is None:
+            out.pop("explanation")
         out["steps"] = [s.to_json() for s in self.steps]
         out["timing"] = self.timing()
         return out

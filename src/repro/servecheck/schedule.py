@@ -22,6 +22,7 @@ from ..api.runner import _engine_opts
 from ..api.spec import Degree, task_id
 from ..core import (RefinementError, capture, capture_spmd, check_refinement,
                     expand_spmd)
+from ..core.explain import aggregate_explanations
 from ..core.terms import pretty
 from ..modelcheck.obligations import Obligation
 from ..modelcheck.stitch import expected_output_relation
@@ -57,12 +58,14 @@ def _verify_obligation(ob: Obligation, name: str, expected: str,
                                list(ob.in_specs), list(ob.avals),
                                list(ob.input_names))
             gd, r_i = expand_spmd(cap)
-            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes)
+            cert = check_refinement(gs, gd, r_i, max_nodes=eo.max_nodes,
+                                    explain=eo.explain)
     except RefinementError as e:
         return Report(
             case=name, degree=degree, bug=bug,
             verdict="refinement_error", expected=expected,
             ok=expected == "refinement_error", localization=e.payload(),
+            explanation=getattr(e, "explanation", None),
             wall_s=round(time.perf_counter() - t0, 6)).to_json()
     except Exception as e:  # noqa: BLE001 — capture/engine failure -> verdict
         return Report(
@@ -96,6 +99,7 @@ def _verify_obligation(ob: Obligation, name: str, expected: str,
         case=name, degree=degree, bug=bug,
         verdict="certificate", expected=expected, ok=ok,
         r_o=cert_json["r_o"], stats=cert_json["stats"],
+        explanation=cert.explanation,
         wall_s=round(time.perf_counter() - t0, 6)).to_json()
     d["seams"] = seams
     return d
@@ -259,4 +263,5 @@ def check_serve(strategy: str, *, degree: Optional[Degree] = None,
         dedup_ratio=round(obset.dedup_ratio, 3),
         failing_steps=failing, bug=bug, bug_step=bug_step,
         wall_s=round(time.perf_counter() - t0, 6), workers=used,
-        cache=cache_stats, pool=pstats)
+        cache=cache_stats, pool=pstats,
+        explanation=aggregate_explanations(reports))
